@@ -1,0 +1,56 @@
+"""Microbenchmarks: the BS algorithm + slot scheduler themselves.
+
+The OLT recomputes the slice on membership change; Algorithm 1 must be
+cheap at the 128-ONU scale (and far beyond, for the 1000-node story).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.scheduler import map_to_polling_cycles, schedule_slots
+from repro.core.slicing import ClientProfile, compute_slice
+
+M = 26.416e6
+
+
+def _clients(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        ClientProfile(client_id=i, t_ud=float(t), t_dl=0.01, m_ud_bits=M)
+        for i, t in enumerate(rng.uniform(1.0, 5.0, n))
+    ]
+
+
+def run() -> list:
+    rows = []
+    for n in (128, 1024, 4096):
+        clients = _clients(n)
+        reps = 20 if n <= 1024 else 5
+        t0 = time.time()
+        for _ in range(reps):
+            spec = compute_slice(clients, 0.0, 10.0, 10e9, h=1)
+            slots = schedule_slots(clients, spec, 0.0)
+        wall = (time.time() - t0) / reps
+        rows.append(
+            {
+                "name": f"bs_algorithm_n{n}",
+                "us_per_call": wall * 1e6,
+                "derived": f"B_mbps={spec.bandwidth_bps/1e6:.1f} "
+                           f"tau_s={spec.tau:.3f} slots={len(slots)}",
+            }
+        )
+    clients = _clients(128)
+    spec = compute_slice(clients, 0.0, 10.0, 10e9, h=1)
+    slots = schedule_slots(clients, spec, 0.0)
+    t0 = time.time()
+    grants = map_to_polling_cycles(slots, spec, cycle_time_s=1e-3)
+    rows.append(
+        {
+            "name": "bs_polling_cycle_mapping_n128",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": f"grants={len(grants)}",
+        }
+    )
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline summary rows from recorded dry-run JSONL (if present)."""
+from __future__ import annotations
+
+import glob
+import os
+
+from repro.launch.roofline import load_rows
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run() -> list:
+    paths = sorted(glob.glob(os.path.join(RESULTS, "dryrun_*_final.jsonl")))
+    if not paths:
+        paths = sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.jsonl")))
+    if not paths:
+        return [
+            {
+                "name": "roofline_report",
+                "us_per_call": 0.0,
+                "derived": "no dryrun records; run repro.launch.dryrun first",
+            }
+        ]
+    rows = load_rows(paths)
+    out = []
+    for r in sorted(rows, key=lambda r: (r.mesh, r.arch, r.shape)):
+        out.append(
+            {
+                "name": f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+                "us_per_call": r.compute_s * 1e6,
+                "derived": (
+                    f"compute_s={r.compute_s:.4f} memory_s={r.memory_s:.4f} "
+                    f"coll_s={r.collective_s:.4f} dominant={r.dominant} "
+                    f"useful={r.useful_ratio:.2f} "
+                    f"roofline_frac={r.roofline_fraction:.3f}"
+                ),
+            }
+        )
+    return out

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bs_micro,
+        fig2a_accuracy,
+        fig2b_sync_time,
+        roofline_report,
+        training_time_saving,
+    )
+
+    modules = [
+        ("bs_micro", bs_micro),
+        ("fig2b_sync_time", fig2b_sync_time),
+        ("training_time_saving", training_time_saving),
+        ("fig2a_accuracy", fig2a_accuracy),
+        ("roofline_report", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}",
+                      flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,ERROR: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: federated training of a ~100M-param LM.
+
+Two federated pods (EC sites) train disjoint shards of a synthetic token
+stream with local AdamW steps; every round the pod models are FedAvg'd over
+the pod axis with int8-compressed updates (the paper's M_i^UD lever), and
+round wall-clock comes from the PON co-simulation under bandwidth slicing.
+Checkpoints every round; kill and re-run to see restart.
+
+The ~100M configuration is a scaled olmo-family model (12L, d=768). A few
+hundred steps run in tens of minutes on this 1-core container; pass
+--steps/--rounds to trim.
+
+Run:  PYTHONPATH=src python examples/federated_lm.py --steps 150 --rounds 2
+"""
+import argparse
+
+from repro.launch.train import train
+
+# ~100M params: 12L x d768 x ff3072, vocab 32000 (olmo-style family)
+CONFIG_100M = dict(
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=3072, vocab_size=32000, dtype="float32", param_dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_fedlm_ckpt")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-size model instead of ~100M")
+    args = ap.parse_args()
+
+    overrides = None if args.tiny else CONFIG_100M
+    state, history = train(
+        arch="olmo-1b",
+        smoke=True,                      # base config; overridden below
+        steps_per_round=args.steps,
+        rounds=args.rounds,
+        n_pods=2,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        lr=1e-3,
+        ckpt_dir=args.ckpt_dir,
+        policy="bs",
+        load=0.8,
+        compress="int8",
+        config_overrides=overrides,
+    )
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {len(history)} rounds")
+    assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Checkpoint substrate: atomic msgpack checkpoints + lifecycle manager."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    AsyncWriter,
+    CheckpointCorruption,
+    load,
+    save,
+)
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

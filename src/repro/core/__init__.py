@@ -1,0 +1,28 @@
+"""The paper's primary contribution: bandwidth slicing for FL in edge computing."""
+from repro.core.slicing import (  # noqa: F401
+    ClientProfile,
+    SliceSpec,
+    compute_slice,
+    min_round_time,
+    nabla,
+    validate_round_deadline,
+)
+from repro.core.scheduler import (  # noqa: F401
+    CycleGrant,
+    SlotAssignment,
+    map_to_polling_cycles,
+    schedule_makespan,
+    schedule_slots,
+    validate_schedule,
+)
+from repro.core.round_model import (  # noqa: F401
+    RoundTiming,
+    bs_round_time,
+    download_time,
+    heterogeneous_compute_times,
+)
+from repro.core.membership import MembershipEvent, SliceManager  # noqa: F401
+from repro.core.deadline import (  # noqa: F401
+    greedy_max_clients,
+    select_by_deadline,
+)

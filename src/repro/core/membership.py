@@ -1,0 +1,77 @@
+"""Elastic client membership — the BS re-trigger semantics (paper §2).
+
+"The proposed BS algorithm is triggered only when new clients join or leave
+the FL task." This module tracks Φ across rounds, detects membership deltas,
+and re-runs the BS algorithm exactly when they occur. It is also the
+fault-tolerance hook: a client that fails mid-round is a `leave` event; a
+recovered client is a `join`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
+
+
+@dataclass
+class MembershipEvent:
+    time: float
+    kind: str                   # "join" | "leave"
+    client: ClientProfile
+
+
+@dataclass
+class SliceManager:
+    """Owns the current slice; recomputes only on membership change."""
+
+    capacity_bps: float
+    t_round: float
+    clients: Dict[int, ClientProfile] = field(default_factory=dict)
+    current_slice: Optional[SliceSpec] = None
+    recompute_count: int = 0
+    event_log: List[MembershipEvent] = field(default_factory=list)
+
+    def bootstrap(self, clients: Sequence[ClientProfile], t_now: float = 0.0):
+        self.clients = {c.client_id: c for c in clients}
+        self._retrigger(t_now)
+
+    def join(self, client: ClientProfile, t_now: float):
+        self.event_log.append(MembershipEvent(t_now, "join", client))
+        self.clients[client.client_id] = client
+        self._retrigger(t_now)
+
+    def leave(self, client_id: int, t_now: float):
+        client = self.clients.pop(client_id, None)
+        if client is None:
+            return  # unknown client: no-op, no re-trigger
+        self.event_log.append(MembershipEvent(t_now, "leave", client))
+        if self.clients:
+            self._retrigger(t_now)
+        else:
+            self.current_slice = None
+
+    def on_round(self, t_now: float) -> Optional[SliceSpec]:
+        """Called every round; returns the slice WITHOUT recomputation.
+
+        (The paper's key property: rounds reuse the slice; only membership
+        changes pay the recomputation.)
+        """
+        return self.current_slice
+
+    def _retrigger(self, t_now: float):
+        if not self.clients:
+            self.current_slice = None
+            return
+        self.current_slice = compute_slice(
+            list(self.clients.values()),
+            t_current=t_now,
+            t_round=self.t_round,
+            capacity_bps=self.capacity_bps,
+            h=1,
+        )
+        self.recompute_count += 1
+
+    @property
+    def profile_set(self) -> List[ClientProfile]:
+        return list(self.clients.values())

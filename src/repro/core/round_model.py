@@ -1,0 +1,71 @@
+"""Synchronisation-round time model (paper §2, Fig. 1).
+
+One synchronous FL round per client i:
+
+    T_i = T_i^DL (global model download)
+        + T_i^UD (local training)
+        + T_i^UL (local model upload)
+        + T_a    (aggregation at the CPS; paper assumes ≈ 0)
+
+The round's synchronisation time is ``max_i T_i^DL+T_i^UD + upload drain``,
+where the upload drain depends on the DBA policy — this module computes the
+*analytic* BS value; the FCFS benchmark value comes from the event simulator
+(``repro.net``), which also cross-validates the BS analytic model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.scheduler import schedule_makespan, schedule_slots
+from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
+
+
+@dataclass(frozen=True)
+class RoundTiming:
+    sync_time: float            # wall-clock for the full round
+    compute_bound: float        # max_i (T_i^DL + T_i^UD): the floor
+    comm_overhead: float        # sync_time - compute_bound
+    per_client_upload_end: dict
+
+
+def bs_round_time(
+    clients: Sequence[ClientProfile],
+    capacity_bps: float,
+    t_aggregate: float = 0.0,
+    spec: SliceSpec | None = None,
+) -> RoundTiming:
+    """Analytic round time under bandwidth slicing (round starts at t=0)."""
+    if spec is None:
+        spec = compute_slice(clients, t_current=0.0, t_round=0.0,
+                             capacity_bps=capacity_bps, h=1)
+    # slice times here are relative to the round start (t_current=0, h*0=0)
+    slots = schedule_slots(clients, spec, round_start=0.0)
+    makespan = schedule_makespan(slots)
+    compute_bound = max(c.delta for c in clients)
+    prop = max(c.propagation_s for c in clients)
+    sync = makespan + prop + t_aggregate
+    return RoundTiming(
+        sync_time=sync,
+        compute_bound=compute_bound,
+        comm_overhead=sync - compute_bound,
+        per_client_upload_end={s.client_id: s.t_end for s in slots},
+    )
+
+
+def download_time(model_bits: float, downlink_bps: float,
+                  distance_m: float = 20_000.0) -> float:
+    """T_i^DL for the broadcast of the global model on reserved downlink."""
+    from repro.core.slicing import LIGHT_SPEED_FIBER
+
+    return model_bits / downlink_bps + distance_m / LIGHT_SPEED_FIBER
+
+
+def heterogeneous_compute_times(
+    n_clients: int,
+    rng,
+    t_min_s: float = 1.0,
+    t_max_s: float = 5.0,
+) -> list:
+    """Paper Fig 2(b): T_i^UD uniform in [1, 5] s across the EC nodes."""
+    return list(rng.uniform(t_min_s, t_max_s, size=n_clients))

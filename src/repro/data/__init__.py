@@ -1,0 +1,7 @@
+"""Data substrate: synthetic tasks, federated partitioning, input pipeline."""
+from repro.data.federated import (  # noqa: F401
+    build_federated_cnn_clients,
+    partition_tokens,
+)
+from repro.data.pipeline import TokenBatcher, shard_batch  # noqa: F401
+from repro.data.synthetic import femnist_like, lm_tokens  # noqa: F401

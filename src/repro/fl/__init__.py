@@ -1,0 +1,24 @@
+"""Federated-learning substrate: server, clients, aggregation, co-simulation."""
+from repro.fl.aggregation import (  # noqa: F401
+    FedBuffAggregator,
+    fedadam_init,
+    fedadam_step,
+    fedavg,
+    fedavg_delta,
+)
+from repro.fl.client import Client, LocalTrainConfig  # noqa: F401
+from repro.fl.compression import (  # noqa: F401
+    CompressorConfig,
+    compress_delta,
+    compressed_update_bits,
+    dequantize_int8,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.fl.selection import SelectionConfig, select_clients  # noqa: F401
+from repro.fl.server import CPSServer, RoundLog  # noqa: F401
+from repro.fl.simulation import (  # noqa: F401
+    CoSimConfig,
+    CoSimResult,
+    FLNetworkCoSim,
+)

@@ -1,0 +1,73 @@
+"""Client-side local training executor (generic over model via loss_fn)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LocalTrainConfig:
+    lr: float = 0.05
+    batch_size: int = 32
+    local_epochs: int = 1
+    momentum: float = 0.0
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "lr", "momentum"))
+def _sgd_step(params, velocity, batch, loss_fn, lr, momentum):
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    if momentum:
+        velocity = jax.tree.map(
+            lambda v, g: momentum * v + g, velocity, grads
+        )
+        grads = velocity
+    params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return params, velocity, loss
+
+
+class Client:
+    """One FL client: local data + local SGD. Failure injection for FT tests."""
+
+    def __init__(
+        self,
+        client_id: int,
+        data: Dict[str, np.ndarray],
+        loss_fn: Callable,
+        cfg: LocalTrainConfig,
+        t_ud_s: float = 1.0,
+        distance_m: float = 20_000.0,
+    ):
+        self.client_id = client_id
+        self.data = data
+        self.loss_fn = loss_fn
+        self.cfg = cfg
+        self.t_ud_s = t_ud_s            # heterogeneous compute time (paper)
+        self.distance_m = distance_m
+
+    @property
+    def n_samples(self) -> int:
+        return len(next(iter(self.data.values())))
+
+    def train(self, global_params, rng: np.random.Generator):
+        """Run local epochs of minibatch SGD from the global model."""
+        params = jax.tree.map(jnp.copy, global_params)
+        velocity = jax.tree.map(lambda l: jnp.zeros_like(l), params)
+        n = self.n_samples
+        bs = min(self.cfg.batch_size, n)
+        losses = []
+        for _ in range(self.cfg.local_epochs):
+            order = rng.permutation(n)
+            for start in range(0, n - bs + 1, bs):
+                idx = order[start : start + bs]
+                batch = {k: jnp.asarray(v[idx]) for k, v in self.data.items()}
+                params, velocity, loss = _sgd_step(
+                    params, velocity, batch, self.loss_fn,
+                    self.cfg.lr, self.cfg.momentum,
+                )
+                losses.append(float(loss))
+        return params, float(np.mean(losses)) if losses else 0.0

@@ -1,0 +1,134 @@
+"""Update compression — the ``M_i^UD`` lever of the paper's Algorithm 1.
+
+The slice bandwidth demand is ``Σ M_i^UD / τ``; shrinking the update bytes
+shrinks the slice (or lets more clients share it). Two standard schemes, both
+with error feedback so compression noise does not bias FedAvg:
+
+* int8 symmetric per-tensor quantisation (4x vs fp32). The Pallas kernel
+  (repro.kernels.quant) implements the same transform for on-device use; this
+  module is the host-side pipeline.
+* top-k sparsification (magnitude): keep the k largest entries per tensor.
+
+``CompressionState`` carries the per-client error-feedback residual.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------- int8 quantisation -----------------------------
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+# --------------------------- top-k sparsification --------------------------
+
+
+def topk_sparsify(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Zero all but the top-``frac`` fraction of entries by magnitude."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(x.shape)
+
+
+# --------------------------- error-feedback pipeline ------------------------
+
+
+@dataclass
+class CompressorConfig:
+    scheme: str = "int8"       # "none" | "int8" | "topk" | "int8+topk"
+    topk_frac: float = 0.05
+    error_feedback: bool = True
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), params)
+
+
+def compress_delta(delta, cfg: CompressorConfig, error_state=None):
+    """Compress an update pytree. Returns (decoded_delta, new_error, bits).
+
+    ``decoded_delta`` is what the server will see after decode (simulation
+    runs both directions at once); ``bits`` is the wire size, which is what
+    feeds ``M_i^UD`` in the BS algorithm.
+    """
+    if cfg.scheme == "none":
+        bits = sum(
+            32 * l.size for l in jax.tree.leaves(delta)
+        )
+        return delta, error_state, bits
+
+    if error_state is None and cfg.error_feedback:
+        error_state = init_error_state(delta)
+
+    bits_total = 0
+    decoded = {}
+    new_err = {}
+
+    leaves_d, treedef = jax.tree.flatten(delta)
+    leaves_e = (
+        jax.tree.leaves(error_state) if error_state is not None
+        else [None] * len(leaves_d)
+    )
+    out_d, out_e = [], []
+    for d, e in zip(leaves_d, leaves_e):
+        target = d.astype(jnp.float32)
+        if cfg.error_feedback and e is not None:
+            target = target + e
+        comp = target
+        bits = 0
+        if "topk" in cfg.scheme:
+            comp = topk_sparsify(comp, cfg.topk_frac)
+            k = max(1, int(cfg.topk_frac * comp.size))
+            bits += k * (32 + 32)           # value + index
+        if "int8" in cfg.scheme:
+            q, scale = quantize_int8(comp)
+            comp = dequantize_int8(q, scale)
+            if "topk" in cfg.scheme:
+                k = max(1, int(cfg.topk_frac * comp.size))
+                bits = k * (8 + 32) + 32    # int8 payload + index + scale
+            else:
+                bits = 8 * comp.size + 32
+        elif "topk" not in cfg.scheme:
+            bits = 32 * comp.size
+        err = target - comp if cfg.error_feedback else None
+        out_d.append(comp.astype(d.dtype))
+        out_e.append(err)
+        bits_total += bits
+
+    decoded = jax.tree.unflatten(treedef, out_d)
+    new_error = (
+        jax.tree.unflatten(treedef, out_e) if cfg.error_feedback else None
+    )
+    return decoded, new_error, int(bits_total)
+
+
+def compressed_update_bits(params, cfg: CompressorConfig) -> int:
+    """Wire size of one update under ``cfg`` (without compressing)."""
+    total = 0
+    for l in jax.tree.leaves(params):
+        if cfg.scheme == "none":
+            total += 32 * l.size
+        elif cfg.scheme == "int8":
+            total += 8 * l.size + 32
+        elif cfg.scheme == "topk":
+            total += max(1, int(cfg.topk_frac * l.size)) * 64
+        elif cfg.scheme == "int8+topk":
+            total += max(1, int(cfg.topk_frac * l.size)) * 40 + 32
+    return total

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper with custom_vjp) and ref.py (pure-jnp oracle).
+On non-TPU backends the kernels run in interpret mode — the whole stack is
+testable in this CPU container; TPU is the compilation target.
+"""

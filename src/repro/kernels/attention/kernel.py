@@ -1,0 +1,165 @@
+"""Pallas TPU flash-attention forward kernel (causal / sliding-window / GQA).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the trailing kv dimension is
+sequential on TPU, so the online-softmax running state (m, l, acc) lives in
+VMEM scratch and persists across kv iterations for the same q block.
+BlockSpecs tile q/k/v to MXU-aligned (block_q x d_head) / (block_k x d_head)
+VMEM windows; kv blocks that lie entirely outside the causal/window band are
+skipped via ``pl.when`` (no VMEM traffic is wasted on them — the index map
+still runs, but the body does not).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q, block_k, seq_len, causal, window, scale,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # is any (query, key) pair in this tile inside the causal/window band?
+    first_q = q_start
+    last_q = q_start + block_q - 1
+    first_k = k_start
+    live = True
+    if causal:
+        live = first_k <= last_q
+    if window is not None:
+        # newest key visible to the oldest query: q - k < window
+        live = jnp.logical_and(live, first_q - (k_start + block_k - 1) < window)
+
+    @pl.when(live if isinstance(live, jnp.ndarray) else live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # (block_q, block_k)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = k_pos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_fwd(
+    q, k, v,
+    causal: bool = True,
+    window=None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q: (B, S, H, D); k, v: (B, T, K, D) with H % K == 0 -> (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    group = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    # pad sequence dims to block multiples
+    S_pad = math.ceil(S / block_q) * block_q
+    T_pad = math.ceil(T / block_k) * block_k
+    if S_pad != S:
+        q = jnp.pad(q, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    if T_pad != T:
+        k = jnp.pad(k, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+
+    # (B, S, H, D) -> (B, H, S, D) blocks are contiguous per head
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, S_pad // block_q, T_pad // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=T,
+        causal=causal,
+        window=window,
+        scale=D ** -0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, g=group: (b, h // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D),
+                lambda b, h, qi, ki, g=group: (b, h // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, S_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :S]

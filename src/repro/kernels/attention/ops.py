@@ -1,0 +1,47 @@
+"""Jit'd public wrapper: Pallas forward + XLA-reference backward.
+
+The forward runs the Pallas kernel (interpret mode on CPU so the whole stack
+stays testable in this container); the backward recomputes through the jnp
+oracle and differentiates it — the standard "fast fwd, recompute bwd"
+custom_vjp pattern, numerically identical to training directly on the
+reference (the fwd values agree to kernel tolerance).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.attention.kernel import flash_attention_fwd
+from repro.kernels.attention.ref import attention_ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window=None):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        interpret=_interpret_default(),
+    )
+
+
+def _fwd(q, k, v, causal, window):
+    out = flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        interpret=_interpret_default(),
+    )
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, residuals, g):
+    q, k, v = residuals
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal, window), q, k, v
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,2 @@
+from repro.kernels.quant import ops, ref  # noqa: F401
+from repro.kernels.quant.ops import dequantize_int8, quantize_int8  # noqa: F401

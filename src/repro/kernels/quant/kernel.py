@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: blockwise symmetric int8 quantisation (+dequant).
+
+The paper's ``M_i^UD`` lever on-device: model updates are quantised to int8
+with one fp32 scale per block before hitting the wire (4x traffic reduction
+feeding Algorithm 1's ``B = Σ M_i^UD / τ``), and dequantised on the CPS.
+
+Grid: 1-D over blocks of the flattened tensor; each program reduces its
+(block,) tile to an absmax, derives the scale, and writes the int8 payload +
+scale — one VMEM pass, no HBM round-trip for the scale computation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_int8_fwd(x, block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """x: any shape -> (q int8 flat-padded, scales (n_blocks,), orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    block = min(block, max(n, 1))
+    n_pad = math.ceil(n / block) * block
+    if n_pad != n:
+        flat = jnp.pad(flat, (0, n_pad - n))
+    n_blocks = n_pad // block
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flat)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize_int8_fwd(q, scales, block: int = DEFAULT_BLOCK,
+                        interpret: bool = False):
+    n_pad = q.size
+    block = min(block, max(n_pad, 1))
+    n_blocks = n_pad // block
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+    return x

@@ -1,0 +1,27 @@
+"""Public int8 compression ops (Pallas on TPU, interpret elsewhere)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quant.kernel import dequantize_int8_fwd, quantize_int8_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_int8(x, block: int = 4096):
+    return quantize_int8_fwd(x, block=block, interpret=_interpret_default())
+
+
+def dequantize_int8(q, scales, block: int = 4096):
+    return dequantize_int8_fwd(
+        q, scales, block=block, interpret=_interpret_default()
+    )
+
+
+def roundtrip(x, block: int = 4096):
+    """quantise+dequantise, same shape back (the wire transform)."""
+    q, s = quantize_int8(x, block)
+    flat = dequantize_int8(q, s, block)
+    return flat[: x.size].reshape(x.shape).astype(x.dtype)

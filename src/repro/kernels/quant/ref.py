@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for blockwise int8 quantisation."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x, block: int = 4096):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    block = min(block, max(n, 1))
+    n_pad = math.ceil(n / block) * block
+    if n_pad != n:
+        flat = jnp.pad(flat, (0, n_pad - n))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127)
+    return q.reshape(-1).astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def dequantize_int8_ref(q, scales, block: int = 4096):
+    block = min(block, max(q.size, 1))
+    blocks = q.reshape(-1, block).astype(jnp.float32)
+    return (blocks * scales[:, None]).reshape(-1)
+
+
+def roundtrip_ref(x, block: int = 4096):
+    q, s = quantize_int8_ref(x, block)
+    flat = dequantize_int8_ref(q, s, block)
+    return flat[: x.size].reshape(x.shape)

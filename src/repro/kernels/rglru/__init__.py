@@ -1,0 +1,2 @@
+from repro.kernels.rglru import ops, ref  # noqa: F401
+from repro.kernels.rglru.ops import rglru_scan  # noqa: F401

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence.
+
+Computes h_t = a_t * h_{t-1} + b_t over the time axis, the core of Griffin's
+RG-LRU (gates/inputs are fused elementwise pre-work done by the caller).
+
+Grid: (batch, r_blocks, time_chunks) — time is the trailing (sequential)
+dimension, so the carry h lives in VMEM scratch across chunks; inside a chunk
+the recurrence steps over rows of a (time_chunk, block_r) VMEM tile. The
+layout keeps the lane dimension (block_r = 128·k) fully vectorised: every
+step is a fused multiply-add over 128-wide lanes, which is how a diagonal
+linear RNN should hit the VPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_R = 128
+DEFAULT_BLOCK_T = 128
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, block_t):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)       # (block_t, block_r)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_scr[...])
+    h_scr[...] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_t", "interpret")
+)
+def rglru_scan_fwd(
+    a, b, h0=None,
+    block_r: int = DEFAULT_BLOCK_R,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = False,
+):
+    """a, b: (B, S, R); h0: (B, R) or None. Returns h: (B, S, R) fp32."""
+    B, S, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+    block_r = min(block_r, R)
+    block_t = min(block_t, S)
+    S_pad = math.ceil(S / block_t) * block_t
+    R_pad = math.ceil(R / block_r) * block_r
+    if (S_pad, R_pad) != (S, R):
+        a = jnp.pad(a, ((0, 0), (0, S_pad - S), (0, R_pad - R)))
+        b = jnp.pad(b, ((0, 0), (0, S_pad - S), (0, R_pad - R)))
+        h0 = jnp.pad(h0, ((0, 0), (0, R_pad - R)))
+
+    grid = (B, R_pad // block_r, S_pad // block_t)
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_r), lambda b_, ri, ti: (b_, ti, ri)),
+            pl.BlockSpec((1, block_t, block_r), lambda b_, ri, ti: (b_, ti, ri)),
+            pl.BlockSpec((1, block_r), lambda b_, ri, ti: (b_, ri)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_t, block_r), lambda b_, ri, ti: (b_, ti, ri)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S_pad, R_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:, :S, :R]

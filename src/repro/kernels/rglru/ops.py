@@ -1,0 +1,31 @@
+"""Jit'd wrapper for the RG-LRU scan: Pallas fwd, XLA-reference bwd."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_fwd
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.custom_vjp
+def rglru_scan(a, b, h0):
+    return rglru_scan_fwd(a, b, h0, interpret=_interpret_default())
+
+
+def _fwd(a, b, h0):
+    return rglru_scan(a, b, h0), (a, b, h0)
+
+
+def _bwd(res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(rglru_scan_ref, a, b, h0)
+    return vjp(g)
+
+
+rglru_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: sequential lax.scan linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t. a, b: (B,S,R); h0: (B,R)|None -> (B,S,R)."""
+    B, S, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (
+            jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        ),
+    )
+    return jnp.moveaxis(hs, 0, 1)

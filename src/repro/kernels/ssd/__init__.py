@@ -1,0 +1,2 @@
+from repro.kernels.ssd import ops, ref  # noqa: F401
+from repro.kernels.ssd.ops import ssd_scan  # noqa: F401

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for the Mamba-2 SSD (state-space duality) scan.
+
+The chunked SSD schedule maps the SSM onto the MXU: inside a chunk the
+output is a masked (decay-weighted) attention-like product C·Bᵀ — dense
+matmuls; across chunks a tiny state recurrence (P x N per head) carries in
+VMEM scratch.
+
+Grid: (batch, heads, chunks) with the chunk axis trailing (sequential), so
+the running state h (d_head x d_state) persists in scratch. Per program the
+VMEM working set is x (Q x P), B/C (Q x N), dt (Q), masks (Q x Q) — with
+Q = 128, P = 64, N = 128 that is well under 1 MB: several programs fit VMEM
+concurrently and every matmul dimension is 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, o_ref, h_scr, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0, 0]                           # scalar decay rate (negative)
+
+    da = dt * a                               # (Q,)
+    cum = jnp.cumsum(da)                      # inclusive
+    seg = cum[-1]
+
+    # intra-chunk: scores[t, s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s<=t
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (Q, Q)
+    rel = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(rel), 0.0)
+    scores = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                         # (Q, P)
+
+    # inter-chunk: y += exp(cum_t) * C_t . h_prev
+    h = h_scr[...]                            # (P, N)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: h = exp(seg) * h + sum_s exp(seg - cum_s) dt_s x_s B_s^T
+    w = jnp.exp(seg - cum) * dt               # (Q,)
+    xw = x * w[:, None]                       # (Q, P)
+    h_new = jnp.exp(seg) * h + jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (P, N)
+    h_scr[...] = h_new
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_fwd(
+    xh, b_mat, c_mat, dt, a,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """Chunked SSD scan.
+
+    xh:    (B, S, H, P)  per-head inputs
+    b_mat: (B, S, N)     shared input projection
+    c_mat: (B, S, N)     shared output projection
+    dt:    (B, S, H)     positive step sizes (fp32)
+    a:     (H,)          negative decay rates
+    Returns y: (B, S, H, P) fp32.
+    """
+    B, S, H, P = xh.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, S)
+    S_pad = math.ceil(S / Q) * Q
+    if S_pad != S:
+        xh = jnp.pad(xh, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, S_pad - S), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, S_pad - S), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, S_pad - S), (0, 0)))
+
+    xt = xh.transpose(0, 2, 1, 3)             # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)               # (B, H, S)
+    nc = S_pad // Q
+
+    grid = (B, H, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S_pad, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, b_mat, c_mat, dtt, a.reshape(1, H))
+    return out.transpose(0, 2, 1, 3)[:, :S]

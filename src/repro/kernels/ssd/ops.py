@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the SSD scan: Pallas fwd, XLA-reference bwd."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_scan_fwd
+from repro.kernels.ssd.ref import ssd_scan_ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.custom_vjp
+def ssd_scan(xh, b_mat, c_mat, dt, a):
+    return ssd_scan_fwd(xh, b_mat, c_mat, dt, a,
+                        interpret=_interpret_default())
+
+
+def _fwd(xh, b_mat, c_mat, dt, a):
+    return ssd_scan(xh, b_mat, c_mat, dt, a), (xh, b_mat, c_mat, dt, a)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ssd_scan_ref, *res)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)

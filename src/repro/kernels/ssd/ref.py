@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: token-by-token SSM recurrence (the slow exact form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xh, b_mat, c_mat, dt, a):
+    """Sequential SSM recurrence.
+
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * (x_t B_t^T);  y_t = C_t . h_t
+    Shapes as in ssd_scan_fwd; returns (B, S, H, P) fp32.
+    """
+    B, S, H, P = xh.shape
+    N = b_mat.shape[-1]
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp
+        # h: (B, H, P, N)
+        da = jnp.exp(dt_t * a[None, :])               # (B, H)
+        inc = jnp.einsum("bh,bn,bhp->bhpn", dt_t, b_t, x_t)
+        h = h * da[..., None, None] + inc
+        y = jnp.einsum("bn,bhpn->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,5 @@
+"""Launchers: meshes, dry-run, training and serving drivers.
+
+NOTE: importing this package must not initialise jax devices;
+``dryrun.py`` sets XLA_FLAGS itself and must be run as __main__.
+"""

@@ -1,0 +1,264 @@
+"""Static analysis of optimised (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which makes
+it useless for scan-over-layers models. This module re-derives the roofline
+inputs directly from the HLO text, with loop-trip multipliers:
+
+* ``flops``       — 2 x prod(result) x prod(contracting dims) per dot op
+                    (matmuls dominate every model here; elementwise flops are
+                    reported separately by XLA's own counter);
+* ``hbm_bytes``   — operand + result bytes of every top-level op in traffic
+                    computations (entry, while bodies/conds, branches):
+                    fusion boundaries are exactly XLA's HBM-traffic model;
+* ``collectives`` — result bytes per collective kind.
+
+Trip counts come from each while op's ``known_trip_count`` backend config
+(exact for lax.scan); the per-depth fallback list covers the rare unpinned
+loop. Async -start/-done pairs are counted once. Fusion-internal traffic is
+invisible by construction (that is XLA's own HBM model); dynamic-(update-)
+slice is counted at slice granularity (aliased in place).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "iota", "after-all", "partition-id", "replica-id",
+    # control ops: their bodies' ops are accounted directly
+    "while", "conditional", "call",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+class HloModule:
+    def __init__(self, text: str):
+        # computation -> list of (name, result_type, op, rest_of_line)
+        self.comps: Dict[str, List[Tuple[str, str, str, str]]] = {}
+        self.symbols: Dict[str, str] = {}        # instr name -> result type
+        self.while_callees: Dict[str, set] = {}  # loop-entered computations
+        self.trip_counts: Dict[str, int] = {}    # body/cond comp -> known trip
+        self.fusion_callees: set = set()
+        self.branch_callees: set = set()
+        current = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            hm = _COMP_HEADER.match(line)
+            if hm and "=" not in line.split("(")[0]:
+                current = hm.group(1)
+                self.comps.setdefault(current, [])
+                continue
+            if current is None or not line or line == "}":
+                continue
+            im = _INSTR.match(line)
+            if not im:
+                continue
+            name, rtype, op, rest = im.groups()
+            self.comps[current].append((name, rtype, op, rest))
+            self.symbols[name] = rtype
+            if op == "while":
+                tc = re.search(r'"known_trip_count":\{"n":"(\d+)"', rest)
+                trip = int(tc.group(1)) if tc else None
+                for key in ("body", "condition"):
+                    m = re.search(rf"{key}=%?([\w.\-]+)", rest)
+                    if m:
+                        self.while_callees.setdefault(current, set()).add(
+                            m.group(1)
+                        )
+                        if trip is not None:
+                            self.trip_counts[m.group(1)] = trip
+            for m in re.finditer(r"calls=%?([\w.\-]+)", rest):
+                self.fusion_callees.add(m.group(1))
+            for m in re.finditer(r"branch_computations=\{([^}]*)\}", rest):
+                for name2 in _OPERAND.findall(m.group(1)):
+                    self.branch_callees.add(name2)
+                for name2 in re.findall(r"([\w.\-]+)", m.group(1)):
+                    self.branch_callees.add(name2)
+
+    def multipliers(self, trips) -> Dict[str, int]:
+        """computation -> execution multiplier.
+
+        Trip counts come from the HLO's own ``known_trip_count`` backend
+        config when present (exact); ``trips`` (per nesting depth, deeper
+        loops reuse the last entry) is the fallback.
+        """
+        if isinstance(trips, int):
+            trips = [trips]
+        trips = list(trips) or [1]
+        # entry is conventionally the LAST computation in HLO text
+        entry = list(self.comps.keys())[-1]
+        mult = {entry: 1}
+        depth = {entry: 0}
+        frontier = [entry]
+        while frontier:
+            comp = frontier.pop()
+            m = mult[comp]
+            d = depth[comp]
+            fallback = trips[min(d, len(trips) - 1)]
+            for callee in self.while_callees.get(comp, ()):  # loop body/cond
+                trip = self.trip_counts.get(callee, fallback)
+                nm = m * trip
+                if mult.get(callee, 0) < nm:
+                    mult[callee] = nm
+                    depth[callee] = d + 1
+                    frontier.append(callee)
+            # walk branches at same multiplicity and depth
+            for _, _, op, rest in self.comps.get(comp, ()):
+                if op == "conditional":
+                    for cal in re.findall(r"([\w.\-]+)", rest):
+                        if cal in self.comps and cal not in mult:
+                            mult[cal] = m
+                            depth[cal] = d
+                            frontier.append(cal)
+        return mult
+
+
+def analyze(text: str, loop_trips=(1,)) -> Dict:
+    mod = HloModule(text)
+    mult = mod.multipliers(loop_trips)
+
+    flops = 0.0
+    dot_count = 0
+    for comp, instrs in mod.comps.items():
+        # dots inside fusion computations execute as part of the fusion's
+        # computation: give them the multiplier of any caller context.
+        m = mult.get(comp)
+        if m is None:
+            # fusion-internal computation: inherit loop membership by name
+            # lookup through the call graph — approximate with trip if ANY
+            # loop body calls it.
+            m = None
+        for name, rtype, op, rest in instrs:
+            if op != "dot":
+                continue
+            dot_count += 1
+            result_dims = _first_shape_dims(rtype) or []
+            operands = _OPERAND.findall(rest.split(")", 1)[0])
+            lhs_type = mod.symbols.get(operands[0], "") if operands else ""
+            lhs_dims = _first_shape_dims(lhs_type) or []
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            contract = 1
+            if cm and lhs_dims:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            n_out = 1
+            for d in result_dims:
+                n_out *= d
+            eff_m = m if m is not None else _fusion_multiplier(
+                mod, comp, mult
+            )
+            flops += 2.0 * n_out * contract * eff_m
+
+    hbm_bytes = 0.0
+    traffic_comps = {c: m for c, m in mult.items()}
+    for comp, m in traffic_comps.items():
+        for name, rtype, op, rest in mod.comps.get(comp, ()):
+            if op in _SKIP_OPS:
+                continue
+            operands = _OPERAND.findall(rest.split(")", 1)[0])
+            if op == "dynamic-update-slice":
+                # aliased in-place: traffic = the updated slice (read+write)
+                upd = operands[1] if len(operands) > 1 else None
+                nbytes = 2 * _type_bytes(mod.symbols.get(upd, ""))
+            elif op == "dynamic-slice":
+                nbytes = 2 * _type_bytes(rtype)
+            else:
+                nbytes = _type_bytes(rtype)
+                for o in operands:
+                    nbytes += _type_bytes(mod.symbols.get(o, ""))
+                if op == "fusion":
+                    # a fusion whose root is dynamic-update-slice aliases the
+                    # big buffer in place: count the updated slice, not the
+                    # full buffer on both sides.
+                    cm2 = re.search(r"calls=%?([\w.\-]+)", rest)
+                    fused = mod.comps.get(cm2.group(1), []) if cm2 else []
+                    dus = [i for i in fused if i[2] == "dynamic-update-slice"]
+                    if dus:
+                        rb = _type_bytes(rtype)
+                        for o in operands:
+                            if _type_bytes(mod.symbols.get(o, "")) == rb:
+                                nbytes -= 2 * rb
+                                break
+                        for d in dus:
+                            u_ops = _OPERAND.findall(d[3].split(")", 1)[0])
+                            upd = u_ops[1] if len(u_ops) > 1 else None
+                            nbytes += 2 * _type_bytes(
+                                mod.symbols.get(upd, "")
+                            )
+                        nbytes = max(nbytes, 0)
+            hbm_bytes += nbytes * m
+
+    per_kind: Dict[str, float] = {}
+    count = 0
+    for comp, instrs in mod.comps.items():
+        m = mult.get(comp)
+        if m is None:
+            m = _fusion_multiplier(mod, comp, mult)
+        for name, rtype, op, rest in instrs:
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+                per_kind[base] = per_kind.get(base, 0.0) + _type_bytes(rtype) * m
+                count += 1
+    return {
+        "flops": flops,
+        "dot_count": dot_count,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {
+            "per_kind": per_kind,
+            "total_bytes": sum(per_kind.values()),
+            "static_op_count": count,
+        },
+    }
+
+
+def _fusion_multiplier(mod: HloModule, comp: str, mult: Dict[str, int]) -> int:
+    """Multiplier for a fusion-internal computation: that of its caller."""
+    for caller, instrs in mod.comps.items():
+        cm = mult.get(caller)
+        if cm is None:
+            continue
+        for _, _, _, rest in instrs:
+            if re.search(rf"calls=%?{re.escape(comp)}\b", rest):
+                return cm
+    # not found at top level: assume loop membership is unknown -> 1
+    return 1

@@ -1,0 +1,164 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape x step).
+
+No device allocation anywhere: parameter/optimizer/cache shapes come from
+``jax.eval_shape`` over the real init functions, then get NamedShardings from
+``repro.dist.sharding``. This is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.dist import sharding as shd
+from repro.dist.stepfns import TrainState, init_fed_state, init_train_state
+from repro.models import lm
+from repro.optim.optimizers import OptimizerConfig
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _with_shardings(shape_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree,
+        sharding_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# state specs
+# ---------------------------------------------------------------------------
+
+
+def state_shapes(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                 n_pods: int = 0) -> TrainState:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if n_pods:
+        return jax.eval_shape(
+            partial(init_fed_state, cfg=cfg, opt_cfg=opt_cfg, n_pods=n_pods),
+            key,
+        )
+    return jax.eval_shape(
+        partial(init_train_state, cfg=cfg, opt_cfg=opt_cfg), key
+    )
+
+
+def state_spec_tree(state_shape: TrainState, cfg: ModelConfig, mesh,
+                    fed: bool = False) -> TrainState:
+    """PartitionSpec tree matching a TrainState shape-tree."""
+    strip = 1 if fed else 0
+
+    def despecced(leaf_shape):
+        return jax.ShapeDtypeStruct(
+            leaf_shape.shape[strip:], leaf_shape.dtype
+        )
+
+    def podded(spec: P) -> P:
+        return P(*(("pod",) + tuple(spec))) if fed else spec
+
+    params_inner = jax.tree.map(despecced, state_shape.params)
+    p_specs = shd.param_specs(params_inner, cfg, mesh)
+    p_specs = jax.tree.map(podded, p_specs, is_leaf=lambda x: isinstance(x, P))
+
+    def moment_specs(tree):
+        inner = jax.tree.map(despecced, tree)
+        specs = shd.opt_moment_specs(inner, cfg, mesh)
+        return jax.tree.map(podded, specs, is_leaf=lambda x: isinstance(x, P))
+
+    opt_specs = type(state_shape.opt)(
+        step=P("pod") if fed else P(),
+        mu=moment_specs(state_shape.opt.mu),
+        nu=moment_specs(state_shape.opt.nu),
+    )
+    return TrainState(params=p_specs, opt=opt_specs)
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh,
+                fed: bool = False, n_pods: int = 0):
+    """Returns (state ShapeDtypeStruct tree w/ shardings, sharding tree)."""
+    shapes = state_shapes(cfg, opt_cfg, n_pods if fed else 0)
+    specs = state_spec_tree(shapes, cfg, mesh, fed=fed)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return _with_shardings(shapes, shardings), shardings
+
+
+# ---------------------------------------------------------------------------
+# batch / serving input specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                      fed: bool = False, n_pods: int = 0) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    n_front = cfg.n_frontend_tokens
+    s_text = S - n_front
+    bspec = shd.batch_spec(mesh, B)
+    batch = {
+        "tokens": _sds((B, s_text), jnp.int32, mesh, bspec),
+        "labels": _sds((B, s_text), jnp.int32, mesh, bspec),
+    }
+    if cfg.frontend:
+        fspec = P(*(tuple(bspec) + (None, None))) if tuple(bspec) else P()
+        batch["extra_embeds"] = _sds(
+            (B, n_front, cfg.d_model), jnp.dtype(cfg.dtype), mesh, fspec
+        )
+    if fed:
+        def podify(sds):
+            per_pod = sds.shape[0] // n_pods
+            data_ok = (
+                "data" in mesh.axis_names
+                and per_pod % mesh.shape["data"] == 0
+            )
+            spec = P("pod", "data" if data_ok else None,
+                     *((None,) * (len(sds.shape) - 1)))
+            return _sds((n_pods, per_pod) + sds.shape[1:], sds.dtype, mesh,
+                        spec)
+
+        batch = {k: podify(v) for k, v in batch.items()}
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh):
+    shapes = jax.eval_shape(
+        partial(lm.init_cache, cfg, batch, max_len)
+    )
+    spec_tree = shd.cache_specs(shapes, cfg, mesh, batch)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return _with_shardings(shapes, shardings), shardings
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """(params..., token, cache) for decode_step; token at position seq_len-1."""
+    B = shape.global_batch
+    cache, cache_shardings = cache_specs(cfg, B, shape.seq_len, mesh)
+    token = _sds((B, 1), jnp.int32, mesh, shd.batch_spec(mesh, B))
+    return token, cache, cache_shardings
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    n_front = cfg.n_frontend_tokens
+    bspec = shd.batch_spec(mesh, B)
+    tokens = _sds((B, S - n_front), jnp.int32, mesh, bspec)
+    cache, cache_shardings = cache_specs(cfg, B, S, mesh)
+    extra = None
+    if cfg.frontend:
+        fspec = P(*(tuple(bspec) + (None, None))) if tuple(bspec) else P()
+        extra = _sds((B, n_front, cfg.d_model), jnp.dtype(cfg.dtype), mesh,
+                     fspec)
+    return tokens, cache, cache_shardings, extra

@@ -1,0 +1,176 @@
+"""End-to-end federated LM training driver (CPU-scale; TPU-shaped).
+
+Runs the full production stack on whatever devices exist: config-driven
+model, sharded train step, federated pod-axis rounds (FedAvg with optional
+int8 round compression), BS-timed rounds via the PON co-simulation,
+checkpoint/restart. This is the driver the examples call; on a real fleet
+only the mesh constructor changes.
+
+Usage:
+  python -m repro.launch.train --arch olmo-1b --smoke --steps 50 \
+      --rounds 5 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.slicing import ClientProfile
+from repro.data import TokenBatcher, lm_tokens
+from repro.dist import stepfns
+from repro.launch.mesh import make_host_mesh
+from repro.net.sim import FLRoundWorkload, PONConfig, simulate_round
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedules import warmup_cosine
+
+
+def train(
+    arch: str = "olmo-1b",
+    smoke: bool = True,
+    steps_per_round: int = 20,
+    rounds: int = 3,
+    n_pods: int = 2,
+    global_batch: int = 8,
+    seq_len: int = 64,
+    lr: float = 3e-3,
+    ckpt_dir: Optional[str] = None,
+    policy: str = "bs",
+    load: float = 0.8,
+    compress: str = "int8",
+    log_every: int = 10,
+    config_overrides: Optional[dict] = None,
+):
+    cfg = get_config(arch, smoke=smoke).replace(grad_accum=1)
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    opt_cfg = OptimizerConfig(name="adamw", lr=lr)
+    schedule = warmup_cosine(lr, 20, steps_per_round * rounds)
+
+    n_dev = jax.device_count()
+    pods = n_pods if n_dev % n_pods == 0 and n_dev >= n_pods else 1
+    mesh = make_host_mesh(model_parallel=1, pods=pods) if pods > 1 else (
+        make_host_mesh(model_parallel=1)
+    )
+    print(f"mesh: {dict(mesh.shape)} devices={n_dev}")
+
+    # federated data: one disjoint shard per pod
+    tokens = lm_tokens(400_000, cfg.vocab_size, seed=0)
+    batchers = [
+        TokenBatcher(tokens, global_batch // max(pods, 1), seq_len,
+                     seed=i, pod_index=i, n_pods=max(pods, 1))
+        for i in range(max(pods, 1))
+    ]
+    iters = [iter(b) for b in batchers]
+
+    with mesh:
+        fed = pods > 1
+        if fed:
+            state = stepfns.init_fed_state(
+                jax.random.PRNGKey(0), cfg, opt_cfg, pods
+            )
+            step = jax.jit(stepfns.make_fed_train_step(cfg, opt_cfg, schedule))
+            round_step = jax.jit(
+                stepfns.make_fed_round_step(cfg, compress=compress)
+            )
+        else:
+            state = stepfns.init_train_state(
+                jax.random.PRNGKey(0), cfg, opt_cfg
+            )
+            step = jax.jit(stepfns.make_train_step(cfg, opt_cfg, schedule))
+            round_step = None
+
+        mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+        start_round = 0
+        if mgr is not None:
+            restored = mgr.restore_latest(like=state)
+            if restored is not None:
+                state, meta = restored
+                start_round = int(meta.get("round", 0))
+                print(f"resumed from round {start_round}")
+
+        # PON timing for the round (the paper's co-simulation)
+        rng = np.random.default_rng(0)
+        profiles = [
+            ClientProfile(client_id=i, t_ud=float(t), t_dl=0.0,
+                          m_ud_bits=26.416e6)
+            for i, t in enumerate(rng.uniform(1.0, 5.0, max(pods, 2)))
+        ]
+        pon = PONConfig(n_onus=max(8, pods))
+        sync = simulate_round(
+            pon, FLRoundWorkload(clients=profiles, model_bits=26.416e6),
+            load, policy, seed=0,
+        ).sync_time
+
+        wall_simulated = 0.0
+        history = []
+        for rnd in range(start_round, rounds):
+            t0 = time.time()
+            losses = []
+            for it in range(steps_per_round):
+                if fed:
+                    parts = [next(g) for g in iters]
+                    batch = {
+                        k: jnp.stack([jnp.asarray(p[k]) for p in parts])
+                        for k in parts[0]
+                    }
+                else:
+                    batch = {
+                        k: jnp.asarray(v) for k, v in next(iters[0]).items()
+                    }
+                state, metrics = step(state, batch)
+                loss = float(jnp.mean(metrics["loss"]))
+                losses.append(loss)
+                if it % log_every == 0:
+                    print(f"round {rnd} step {it}: loss={loss:.4f}")
+            if fed:
+                weights = jnp.ones((pods,), jnp.float32)
+                state = round_step(state, weights)
+            wall_simulated += sync
+            history.append(
+                {"round": rnd, "loss": float(np.mean(losses)),
+                 "sync_s": sync, "wall_s": time.time() - t0}
+            )
+            if mgr is not None:
+                mgr.save(rnd + 1, state, metadata={"round": rnd + 1})
+        if mgr is not None:
+            mgr.wait()
+        print(
+            f"done: {rounds} rounds, final loss "
+            f"{history[-1]['loss']:.4f}, simulated FL wall-clock "
+            f"{wall_simulated:.1f}s ({policy} @ load {load})"
+        )
+        return state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--policy", choices=("bs", "fcfs"), default="bs")
+    ap.add_argument("--load", type=float, default=0.8)
+    args = ap.parse_args(argv)
+    train(
+        arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
+        rounds=args.rounds, n_pods=args.pods, global_batch=args.batch,
+        seq_len=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
+        policy=args.policy, load=args.load,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: config-driven decoder LMs + the paper's FEMNIST CNN."""
+from repro.models import attention, cnn, layers, lm, moe, rglru, ssd  # noqa: F401

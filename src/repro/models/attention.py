@@ -1,0 +1,239 @@
+"""Grouped-query attention with RoPE, sliding windows, qk-norm and KV caches.
+
+Reference (pure-XLA) implementation used for training, dry-run lowering and as
+the oracle for the Pallas flash-attention kernel (``repro.kernels.attention``).
+Cache layout: post-RoPE keys, ring buffer for windowed layers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.layers import (
+    apply_head_norm,
+    apply_norm,
+    apply_rope,
+    dense_init,
+    norm_init,
+    rms_head_norm_init,
+)
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig):
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, D, H * Dh, dt),
+        "wk": dense_init(k2, D, K * Dh, dt),
+        "wv": dense_init(k3, D, K * Dh, dt),
+        "wo": dense_init(k4, H * Dh, D, dt, scale=(H * Dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_head_norm_init(Dh, dt)
+        p["k_norm"] = rms_head_norm_init(Dh, dt)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int):
+    """Cache pytree for one attention layer. Ring buffer if windowed.
+
+    Layout note: keys/values are stored with the kv-head and head dims FUSED
+    (B, cap, K*Dh) so the cache carries exactly the same sharding as the
+    K/V projection output (the fused column-parallel dim). With a separate
+    (K, Dh) layout GSPMD cannot map a 16-way "model" axis onto K=8 heads and
+    falls back to all-gathering the whole cache every decode step — the
+    dominant collective in the baseline decode roofline (EXPERIMENTS §Perf).
+    """
+    cap = max_len if spec.window is None else min(spec.window, max_len)
+    K, Dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.kv_cache_dtype == "int8":
+        # per-(batch, slot) scales; int8 payload halves/quarters the HBM
+        # footprint AND the per-step read traffic (dequant fuses into the
+        # attention matmul read) — the fix for arctic-480b decode_32k.
+        return {
+            "k": jnp.zeros((batch, cap, K * Dh), jnp.int8),
+            "v": jnp.zeros((batch, cap, K * Dh), jnp.int8),
+            "k_scale": jnp.ones((batch, cap), jnp.float32),
+            "v_scale": jnp.ones((batch, cap), jnp.float32),
+        }
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, cap, K * Dh), dt),
+        "v": jnp.zeros((batch, cap, K * Dh), dt),
+    }
+
+
+def _quant_rows(x):
+    """x: (B, S, KD) -> (int8, scale (B,S)) symmetric per row."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    )
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dequant_rows(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _mask_full(seq_q: int, seq_k: int, window: Optional[int], offset: int = 0):
+    """Causal (+window) mask for full-sequence attention.
+
+    offset: absolute position of query 0 minus absolute position of key 0.
+    """
+    qi = jnp.arange(seq_q)[:, None] + offset
+    kj = jnp.arange(seq_k)[None, :]
+    mask = kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    return mask  # (seq_q, seq_k) bool
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,Dh) k,v: (B,T,K,Dh) mask: broadcastable to (B,K,G,S,T)."""
+    B, S, H, Dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    scale = Dh ** -0.5
+    qg = q.reshape(B, S, Kh, G, Dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H * Dh)
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, Dh)
+    k = (x @ params["wk"].astype(dt)).reshape(B, S, K, Dh)
+    v = (x @ params["wv"].astype(dt)).reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = apply_head_norm(params["q_norm"], q)
+        k = apply_head_norm(params["k_norm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend_full(q, k, v, cfg: ModelConfig, spec: LayerSpec, seq: int):
+    """Dispatch full-sequence attention by cfg.attn_impl."""
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(q, k, v, causal=True,
+                                        window=spec.window)
+        return out.reshape(out.shape[0], seq, cfg.n_heads * cfg.d_head)
+    if cfg.attn_impl == "chunked":
+        from repro.models.flash_xla import flash_attention_xla
+
+        out = flash_attention_xla(q, k, v, True, spec.window)
+        return out.reshape(out.shape[0], seq, cfg.n_heads * cfg.d_head)
+    mask = _mask_full(seq, seq, spec.window)
+    return _sdpa(q, k, v, mask)
+
+
+def attn_full(params, x, cfg: ModelConfig, spec: LayerSpec, positions):
+    """Full-sequence attention (training / prefill compute)."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = _attend_full(q, k, v, cfg, spec, x.shape[1])
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attn_prefill(params, x, cfg, spec, positions, cache):
+    """Full attention + fill the layer cache (ring layout for windows)."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = _attend_full(q, k, v, cfg, spec, x.shape[1])
+    cap = cache["k"].shape[1]
+    B, S = x.shape[:2]
+    KD = cache["k"].shape[2]
+    kf = k.reshape(B, S, KD)
+    vf = v.reshape(B, S, KD)
+    quant = "k_scale" in cache
+    ks = vs = None
+    if quant:
+        kf, ks = _quant_rows(kf)
+        vf, vs = _quant_rows(vf)
+    if S >= cap:
+        # keep the last `cap` tokens, rolled so slot = position % cap
+        shift = S % cap
+        new_k = jnp.roll(kf[:, S - cap :], shift=shift, axis=1)
+        new_v = jnp.roll(vf[:, S - cap :], shift=shift, axis=1)
+        if quant:
+            ks = jnp.roll(ks[:, S - cap :], shift=shift, axis=1)
+            vs = jnp.roll(vs[:, S - cap :], shift=shift, axis=1)
+    else:
+        new_k = jax.lax.dynamic_update_slice(cache["k"], kf, (0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], vf, (0, 0, 0))
+        if quant:
+            ks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0))
+            vs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0))
+    new_cache = {"k": new_k, "v": new_v}
+    if quant:
+        new_cache["k_scale"] = ks
+        new_cache["v_scale"] = vs
+    return out @ params["wo"].astype(x.dtype), new_cache
+
+
+def attn_decode(params, x, cfg: ModelConfig, spec: LayerSpec, pos, cache):
+    """One-token decode against the cache.
+
+    x: (B, 1, D); pos: scalar int32 — absolute position of the new token
+    (== number of tokens already in the cache).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cap = cache["k"].shape[1]
+    KD = cache["k"].shape[2]
+    slot = pos % cap if spec.window is not None else pos
+    quant = "k_scale" in cache
+    kf, vf = k.reshape(B, 1, KD), v.reshape(B, 1, KD)
+    new_scales = {}
+    if quant:
+        kf, ks_row = _quant_rows(kf)
+        vf, vs_row = _quant_rows(vf)
+        new_scales["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks_row, (0, slot)
+        )
+        new_scales["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs_row, (0, slot)
+        )
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], kf, (0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], vf, (0, slot, 0))
+
+    j = jnp.arange(cap)
+    if spec.window is None:
+        valid = j <= pos
+    else:
+        # ring: slots hold tokens (pos-cap, pos]; all valid once pos+1 >= cap
+        valid = j <= pos  # only limiting before wrap-around
+        valid = jnp.where(pos + 1 >= cap, jnp.ones_like(valid), valid)
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T) -> bcast (B,K,G,1,T)
+    K, Dh = cfg.n_kv_heads, cfg.d_head
+    if quant:
+        k_read = _dequant_rows(k_cache, new_scales["k_scale"], x.dtype)
+        v_read = _dequant_rows(v_cache, new_scales["v_scale"], x.dtype)
+    else:
+        k_read, v_read = k_cache, v_cache
+    out = _sdpa(
+        q,
+        k_read.reshape(B, cap, K, Dh),
+        v_read.reshape(B, cap, K, Dh),
+        mask,
+    )
+    new_cache = {"k": k_cache, "v": v_cache, **new_scales}
+    return out @ params["wo"].astype(x.dtype), new_cache

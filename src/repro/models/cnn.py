@@ -1,0 +1,86 @@
+"""The paper's own FL model: the LEAF FEMNIST CNN (two 5x5 conv layers).
+
+Architecture (LEAF benchmark, arXiv:1812.01097): 28x28x1 input ->
+conv5x5(32) -> maxpool2 -> conv5x5(64) -> maxpool2 -> fc(2048) -> fc(62).
+~6.6 M params; at fp32 that is ~26.4 MB — the paper quotes 26.416 Mbit per
+client update (their constant is reproduced verbatim in the benchmarks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softmax_cross_entropy
+
+N_CLASSES = 62
+IMG = 28
+
+
+def init_params(key, n_classes: int = N_CLASSES, width: int = 1):
+    """width scales the channel counts (width=1 is the paper's model)."""
+    c1, c2, fc = 32 * width, 64 * width, 2048 * width
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    flat = 7 * 7 * c2
+    return {
+        "conv1": {
+            "w": jax.random.normal(k1, (5, 5, 1, c1)) * (25 ** -0.5),
+            "b": jnp.zeros((c1,)),
+        },
+        "conv2": {
+            "w": jax.random.normal(k2, (5, 5, c1, c2)) * ((25 * c1) ** -0.5),
+            "b": jnp.zeros((c2,)),
+        },
+        "fc1": {
+            "w": jax.random.normal(k3, (flat, fc)) * (flat ** -0.5),
+            "b": jnp.zeros((fc,)),
+        },
+        "fc2": {
+            "w": jax.random.normal(k4, (fc, n_classes)) * (fc ** -0.5),
+            "b": jnp.zeros((n_classes,)),
+        },
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params, images):
+    """images: (B, 28, 28, 1) float32 -> logits (B, n_classes)."""
+    x = jax.nn.relu(_conv(images, params["conv1"]))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv(x, params["conv2"]))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["images"])
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def accuracy(params, batch):
+    logits = forward(params, batch["images"])
+    return jnp.mean(
+        (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32)
+    )
+
+
+def param_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+
+
+def param_bits(params) -> int:
+    return 8 * param_bytes(params)

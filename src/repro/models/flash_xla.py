@@ -1,0 +1,228 @@
+"""Flash attention in pure XLA: q-tiled outer scan + kv-block inner scan.
+
+The reference attention materialises fp32 (S x T) score tensors; a naive
+kv-block scan still streams the full-length online-softmax carry (m, l, acc
+over all S) through HBM every step — S^2-scale traffic either way (measured
+in EXPERIMENTS.md §Perf iteration 2). This version tiles queries first:
+
+  outer scan over q tiles (bq rows)         -> emits out/lse per tile
+    inner scan over kv blocks (bk columns)  -> carry is only (bq x Dh)
+
+so every loop-resident tensor is tile-sized; k/v live in one loop-invariant
+buffer read blockwise. The backward recomputes per (q-tile, kv-block) pair:
+dq is emitted per q tile, dk/dv accumulate into an aliased (T x KDh) carry
+via in-place dynamic-update-slice.
+
+Causal/window masks apply per tile pair; fully-masked pairs still execute
+(static trip counts), costing ~2x ideal FLOPs on the causal triangle — the
+roofline report calls this out. Pure jnp: works under jit / GSPMD / the
+scan-over-layers stack, and is the beyond-paper §Perf optimisation. The
+Pallas kernel (repro.kernels.attention) is its TPU-native twin.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _mask(q_pos, k_pos, causal, window, true_t):
+    m = k_pos[None, :] < true_t
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m                                            # (bq, bk)
+
+
+def _fwd_impl(q, k, v, causal, window, bq, bk):
+    """q: (B,S,H,Dh); k,v: (B,T,K,Dh) -> out (B,S,H,Dh), lse (B,K,G,S)."""
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, T)
+    scale = Dh ** -0.5
+
+    qf = _pad_to(
+        q.astype(jnp.float32).reshape(B, S, K, G, Dh), 1, bq
+    )                                                   # (B,Sp,K,G,Dh)
+    kf = _pad_to(k.astype(jnp.float32), 1, bk)
+    vf = _pad_to(v.astype(jnp.float32), 1, bk)
+    Sp, Tp = qf.shape[1], kf.shape[1]
+    nq, nb = Sp // bq, Tp // bk
+
+    q_tiles = jnp.moveaxis(
+        qf.reshape(B, nq, bq, K, G, Dh), 1, 0
+    )                                                   # (nq,B,bq,K,G,Dh)
+    kb = jnp.moveaxis(kf.reshape(B, nb, bk, K, Dh), 1, 0)
+    vb = jnp.moveaxis(vf.reshape(B, nb, bk, K, Dh), 1, 0)
+
+    def q_step(_, tile_inp):
+        q_tile, qi = tile_inp                           # (B,bq,K,G,Dh)
+        q_pos = qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, kv_inp):
+            m, l, acc = carry                           # (B,K,G,bq[,Dh])
+            k_blk, v_blk, bi = kv_inp
+            k_pos = bi * bk + jnp.arange(bk)
+            s = jnp.einsum(
+                "bqkgd,btkd->bkgqt", q_tile, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale                                   # (B,K,G,bq,bk)
+            s = jnp.where(
+                _mask(q_pos, k_pos, causal, window, T)[None, None, None],
+                s, NEG_INF,
+            )
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+        acc0 = jnp.zeros((B, K, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+        )
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        out_tile = acc / safe_l[..., None]              # (B,K,G,bq,Dh)
+        lse_tile = m + jnp.log(safe_l)                  # (B,K,G,bq)
+        return None, (out_tile, lse_tile)
+
+    _, (out_tiles, lse_tiles) = jax.lax.scan(
+        q_step, None, (q_tiles, jnp.arange(nq))
+    )
+    # (nq,B,K,G,bq,Dh) -> (B, Sp, H, Dh)
+    out = jnp.moveaxis(out_tiles, 0, 3)                 # (B,K,G,nq,bq,Dh)
+    out = out.reshape(B, K, G, Sp, Dh)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sp, H, Dh)[:, :S]
+    lse = jnp.moveaxis(lse_tiles, 0, 3).reshape(B, K, G, Sp)[..., :S]
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(
+    q, k, v, causal: bool = True, window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+):
+    """q: (B,S,H,Dh); k,v: (B,T,K,Dh) -> (B,S,H,Dh). GQA via H = K*G."""
+    out, _ = _fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, window, block_q, block_k):
+    out, lse = _fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_k, res, g):
+    q, k, v, out, lse = res
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    scale = Dh ** -0.5
+
+    qf = _pad_to(q.astype(jnp.float32).reshape(B, S, K, G, Dh), 1, bq)
+    g5 = _pad_to(g.astype(jnp.float32).reshape(B, S, K, G, Dh), 1, bq)
+    o5 = _pad_to(out.astype(jnp.float32).reshape(B, S, K, G, Dh), 1, bq)
+    lse_p = _pad_to(lse, 3, bq)                         # (B,K,G,Sp)
+    kf = _pad_to(k.astype(jnp.float32), 1, bk)
+    vf = _pad_to(v.astype(jnp.float32), 1, bk)
+    Sp, Tp = qf.shape[1], kf.shape[1]
+    nq, nb = Sp // bq, Tp // bk
+
+    q_tiles = jnp.moveaxis(qf.reshape(B, nq, bq, K, G, Dh), 1, 0)
+    g_tiles = jnp.moveaxis(g5.reshape(B, nq, bq, K, G, Dh), 1, 0)
+    o_tiles = jnp.moveaxis(o5.reshape(B, nq, bq, K, G, Dh), 1, 0)
+    lse_tiles = jnp.moveaxis(
+        lse_p.reshape(B, K, G, nq, bq), 3, 0
+    )                                                   # (nq,B,K,G,bq)
+    kb = jnp.moveaxis(kf.reshape(B, nb, bk, K, Dh), 1, 0)
+    vb = jnp.moveaxis(vf.reshape(B, nb, bk, K, Dh), 1, 0)
+
+    def q_step(carry, tile_inp):
+        dk_acc, dv_acc = carry                          # (B,Tp,K,Dh) f32
+        q_tile, g_tile, o_tile, lse_tile, qi = tile_inp
+        q_pos = qi * bq + jnp.arange(bq)
+        gt = jnp.moveaxis(g_tile, 1, 3)                 # (B,K,G,bq,Dh)
+        ot = jnp.moveaxis(o_tile, 1, 3)
+        delta = jnp.sum(gt * ot, axis=-1)               # (B,K,G,bq)
+
+        def kv_step(dq_tile, kv_inp):
+            k_blk, v_blk, bi = kv_inp
+            k_pos = bi * bk + jnp.arange(bk)
+            s = jnp.einsum(
+                "bqkgd,btkd->bkgqt", q_tile, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = jnp.where(
+                _mask(q_pos, k_pos, causal, window, T)[None, None, None],
+                s, NEG_INF,
+            )
+            p = jnp.exp(s - lse_tile[..., None])        # (B,K,G,bq,bk)
+            dv_blk = jnp.einsum(
+                "bkgqt,bkgqd->btkd", p, gt,
+                preferred_element_type=jnp.float32,
+            )
+            dp = jnp.einsum(
+                "bkgqd,btkd->bkgqt", gt, v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - delta[..., None]) * scale
+            dq_tile = dq_tile + jnp.einsum(
+                "bkgqt,btkd->bqkgd", ds, k_blk,
+                preferred_element_type=jnp.float32,
+            )
+            dk_blk = jnp.einsum(
+                "bkgqt,bqkgd->btkd", ds, q_tile,
+                preferred_element_type=jnp.float32,
+            )
+            return dq_tile, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((B, bq, K, G, Dh), jnp.float32)
+        dq_tile, (dk_blks, dv_blks) = jax.lax.scan(
+            kv_step, dq0, (kb, vb, jnp.arange(nb))
+        )
+        # fold per-block dk/dv into the aliased full-T accumulators
+        dk_new = jnp.moveaxis(dk_blks, 0, 1).reshape(B, Tp, K, Dh)
+        dv_new = jnp.moveaxis(dv_blks, 0, 1).reshape(B, Tp, K, Dh)
+        return (dk_acc + dk_new, dv_acc + dv_new), dq_tile
+
+    dk0 = jnp.zeros((B, Tp, K, Dh), jnp.float32)
+    dv0 = jnp.zeros((B, Tp, K, Dh), jnp.float32)
+    (dk_p, dv_p), dq_tiles = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (q_tiles, g_tiles, o_tiles, lse_tiles, jnp.arange(nq)),
+    )
+    dq = jnp.moveaxis(dq_tiles, 0, 1).reshape(B, Sp, H, Dh)[:, :S]
+    return (
+        dq.astype(q.dtype),
+        dk_p[:, :T].astype(k.dtype),
+        dv_p[:, :T].astype(v.dtype),
+    )
+
+
+flash_attention_xla.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,160 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Parameters are plain nested dicts of jnp arrays; every block exposes
+``init(key, cfg, ...) -> params`` and ``apply(params, x, ...) -> y``.
+Compute runs in ``cfg.dtype`` with fp32 reductions where it matters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm_nonparam":          # olmo: no scale / bias
+        return {}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": jnp.ones((d,), cfg.param_dtype),
+            "bias": jnp.zeros((d,), cfg.param_dtype),
+        }
+    return {"scale": jnp.ones((d,), cfg.param_dtype)}  # rmsnorm
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm.startswith("layernorm"):
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if params:
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+                jnp.float32
+            )
+        return y.astype(x.dtype)
+    # rmsnorm
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    if params:
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm_init(d_head: int, dtype):
+    """qk-norm (qwen3): RMSNorm over the head dimension."""
+    return {"scale": jnp.ones((d_head,), dtype)}
+
+
+def apply_head_norm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponents)  # (d_head//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., seq, n_heads, d_head); positions: (..., seq) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (..., s, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Classic transformer sinusoidal embedding. positions: (..., S) int."""
+    half = d_model // 2
+    freqs = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    if cfg.mlp_act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, D, d_ff, dt),
+            "w_up": dense_init(k2, D, d_ff, dt),
+            "w_down": dense_init(k3, d_ff, D, dt),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, D, d_ff, dt),
+        "w_down": dense_init(k2, d_ff, D, dt),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.mlp_act == "swiglu":
+        gate = x @ params["w_gate"].astype(dt)
+        up = x @ params["w_up"].astype(dt)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(x @ params["w_in"].astype(dt))
+    return h @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, weights=None, z_loss: float = 0.0):
+    """logits: (..., V) fp-any; labels int32 (...); weights optional (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    loss = lse - label_logit
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if weights is None:
+        return jnp.mean(loss)
+    total = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(loss * weights) / total

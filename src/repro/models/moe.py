@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based GShard dispatch.
+
+Expert weights are stacked along a leading expert axis so expert parallelism
+is a plain sharding decision (``repro.dist.sharding``). Dispatch/combine use
+one-hot matmuls (MXU-friendly, shardable); tokens over capacity are dropped
+(capacity factor 1.25 by default) which keeps the step shape-static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    e = cfg.moe
+    D, E, F = cfg.d_model, e.n_experts, e.d_ff_expert
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def stack_init(k, d_in, d_out):
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk, d_in, d_out, dt) for kk in keys])
+
+    return {
+        "router": dense_init(k1, D, E, dt, scale=0.02),
+        "w_gate": stack_init(k2, D, F),
+        "w_up": stack_init(k3, D, F),
+        "w_down": stack_init(k4, F, D),
+    }
+
+
+def _dispatch_combine(gates_idx, gates_val, n_tokens, n_experts, capacity):
+    """Build (N, E, C) dispatch one-hot and combine weights.
+
+    gates_idx: (N, k) int32 expert ids; gates_val: (N, k) fp32 weights.
+    """
+    k = gates_idx.shape[1]
+    onehot = jax.nn.one_hot(gates_idx, n_experts, dtype=jnp.float32)  # (N,k,E)
+    # priority: slot 0 of every token first, then slot 1, ... (GShard order)
+    flat = jnp.transpose(onehot, (1, 0, 2)).reshape(k * n_tokens, n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat                   # (kN, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)                      # (kN,)
+    keep = (pos < capacity).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)         # (kN, C)
+    disp_flat = flat[:, :, None] * pos_oh[:, None, :] * keep[:, None, None]
+    disp = disp_flat.reshape(k, n_tokens, n_experts, capacity).transpose(
+        1, 0, 2, 3
+    )                                                                 # (N,k,E,C)
+    dispatch = jnp.sum(disp, axis=1)                                  # (N,E,C)
+    combine = jnp.sum(disp * gates_val[:, :, None, None], axis=1)     # (N,E,C)
+    return dispatch, combine
+
+
+def _n_groups(n_tokens: int, group_tokens: int) -> int:
+    """Largest power-of-two group count with groups >= ~group_tokens."""
+    g = 1
+    while (
+        n_tokens % (g * 2) == 0 and n_tokens // (g * 2) >= group_tokens
+    ):
+        g *= 2
+    return g
+
+
+def _moe_group(params, xt, cfg: ModelConfig, capacity: int):
+    """Dispatch+compute one token group. xt: (n, D) -> (y, aux)."""
+    e = cfg.moe
+    n, D = xt.shape
+    dt = xt.dtype
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                           # (n,E)
+    gate_val, gate_idx = jax.lax.top_k(probs, e.top_k)
+    gate_val = gate_val / jnp.maximum(
+        jnp.sum(gate_val, axis=-1, keepdims=True), 1e-9
+    )
+    dispatch, combine = _dispatch_combine(
+        gate_idx, gate_val, n, e.n_experts, capacity
+    )
+    expert_in = jnp.einsum("nec,nd->ecd", dispatch.astype(dt), xt)    # (E,C,D)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"].astype(dt))
+    ) * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"].astype(dt))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+    y = jnp.einsum("nec,ecd->nd", combine.astype(dt), expert_out)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e.n_experts, dtype=jnp.float32), axis=0
+    )
+    aux = e.n_experts * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+    return y, aux * e.load_balance_weight
+
+
+def moe_apply(params, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are processed in GShard-style groups (``moe.group_tokens``): the
+    (g, E, C) dispatch/combine tensors are bounded per group and the group
+    loop is a scan, so dispatch memory no longer scales with the full
+    sequence — the fix that takes mixtral's prefill from TB-scale dispatch
+    buffers to tens of MB (EXPERIMENTS.md §Perf).
+    """
+    e = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = e.capacity_factor
+    B, S, D = x.shape
+    N = B * S
+    xt = x.reshape(N, D)
+
+    g = _n_groups(N, e.group_tokens)
+    n = N // g
+    capacity = int(max(e.top_k, capacity_factor * n * e.top_k / e.n_experts))
+    capacity = min(capacity, n)
+
+    if g == 1:
+        y, aux = _moe_group(params, xt, cfg, capacity)
+        return y.reshape(B, S, D), aux
+
+    xg = xt.reshape(g, n, D)
+    ys, auxs = jax.lax.map(
+        lambda xi: _moe_group(params, xi, cfg, capacity), xg
+    )
+    return ys.reshape(B, S, D), jnp.mean(auxs)

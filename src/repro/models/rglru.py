@@ -1,0 +1,129 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU) — arXiv:2402.19427.
+
+Temporal-mixing block: two branches from the (pre-normed) input,
+  branch1 = GeLU(x @ W_b1)                      (gate branch)
+  branch2 = RG-LRU(causal_conv1d(x @ W_b2))     (recurrent branch)
+  out     = (branch1 * branch2) @ W_out
+
+RG-LRU recurrence (element-wise, width R):
+  r_t = sigmoid(u_t @ W_a + b_a)            recurrence gate
+  i_t = sigmoid(u_t @ W_i + b_i)            input gate
+  log_a_t = -c * softplus(Lambda) * r_t
+  h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2*log_a_t)) * (i_t * u_t)
+
+Training uses ``jax.lax.associative_scan`` (parallel prefix — the TPU-native
+formulation); the Pallas kernel (repro.kernels.rglru) implements the blocked
+sequential scan for long sequences.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def causal_conv1d(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B,S,R), w: (d_conv,R).
+
+    conv_state: (B, d_conv-1, R) previous tokens (decode) or None (train).
+    Returns (y, new_state) where new_state holds the trailing d_conv-1 tokens.
+    """
+    d_conv = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+d_conv-1, R)
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(d_conv):                          # d_conv is tiny (4)
+        y = y + xp[:, i : i + S] * w[i].astype(x.dtype)
+    new_state = xp[:, -(d_conv - 1) :]
+    return y, new_state
+
+
+def rglru_scan(u, r, i, lam, c_const, h0=None):
+    """Associative-scan RG-LRU. u,r,i: (B,S,R) ; lam: (R,) ; h0: (B,R)|None."""
+    log_a = -c_const * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h  # (B,S,R) fp32
+
+
+def rglru_block_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    R = cfg.recurrent.rnn_width
+    dc = cfg.recurrent.d_conv
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_branch1": dense_init(ks[0], D, R, dt),
+        "w_branch2": dense_init(ks[1], D, R, dt),
+        "conv_w": (jax.random.normal(ks[2], (dc, R)) * (dc ** -0.5)).astype(dt),
+        "w_a": dense_init(ks[3], R, R, dt),
+        "b_a": jnp.zeros((R,), dt),
+        "w_i": dense_init(ks[4], R, R, dt),
+        "b_i": jnp.zeros((R,), dt),
+        "lam": jnp.full((R,), 2.0, dt),  # softplus(2) ~ 2.1 -> moderate decay
+        "w_out": dense_init(ks[5], R, D, dt),
+    }
+
+
+def _branches(params, x, cfg, conv_state=None):
+    dt = x.dtype
+    b1 = jax.nn.gelu(x @ params["w_branch1"].astype(dt))
+    u = x @ params["w_branch2"].astype(dt)
+    u, new_conv = causal_conv1d(u, params["conv_w"], conv_state)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    return b1, uf, r, i, new_conv
+
+
+def rglru_full(params, x, cfg: ModelConfig, spec=None, positions=None):
+    b1, u, r, i, _ = _branches(params, x, cfg)
+    h = rglru_scan(u, r, i, params["lam"], cfg.recurrent.c_const)
+    y = (b1 * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return y
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    R = cfg.recurrent.rnn_width
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.recurrent.d_conv - 1, R), cfg.dtype),
+    }
+
+
+def rglru_prefill(params, x, cfg, spec, positions, cache):
+    b1, u, r, i, new_conv = _branches(params, x, cfg, cache["conv"])
+    h = rglru_scan(u, r, i, params["lam"], cfg.recurrent.c_const, cache["h"])
+    y = (b1 * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return y, {"h": h[:, -1], "conv": new_conv}
+
+
+def rglru_decode(params, x, cfg, spec, pos, cache):
+    """x: (B,1,D)."""
+    b1, u, r, i, new_conv = _branches(params, x, cfg, cache["conv"])
+    log_a = (
+        -cfg.recurrent.c_const
+        * jax.nn.softplus(params["lam"].astype(jnp.float32))
+        * r[:, 0]
+    )
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)
+    ) * (i[:, 0] * u[:, 0])
+    y = (b1 * h[:, None].astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return y, {"h": h, "conv": new_conv}

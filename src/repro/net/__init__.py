@@ -1,0 +1,20 @@
+"""PON network substrate: traffic, DBA engines, round simulator."""
+from repro.net.dba import (  # noqa: F401
+    DEFAULT_EFFICIENCY,
+    FCFSBestEffort,
+    FCFSLimitedService,
+    OnuQueue,
+    SlicedDBA,
+)
+from repro.net.sim import (  # noqa: F401
+    FLRoundWorkload,
+    PONConfig,
+    RoundResult,
+    simulate_round,
+)
+from repro.net.traffic import (  # noqa: F401
+    PACKET_BITS,
+    PoissonSource,
+    background_rate_for_load,
+    per_onu_sources,
+)

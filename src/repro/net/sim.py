@@ -1,0 +1,275 @@
+"""Cycle-driven PON simulator for FL synchronisation rounds.
+
+Topology (paper §3): one OLT/CPS + ``n_onus`` ONU/EC nodes, 10 Gbps
+symmetric, 20 km reach, 1 ms polling cycle, ~92% effective payload
+efficiency (guard/REPORT/FEC overheads). Background Poisson traffic rides
+assured T-CONTs in both directions; the FL task's traffic is:
+
+  downstream: the global model — one unicast copy per involved EC node under
+  FCFS (each copy queues as best-effort behind assured background); under BS
+  a single reserved broadcast (PON downstream is physically broadcast, so the
+  slice needs one copy only).
+
+  upstream: each client's ``M_i^UD`` update, entering its ONU's best-effort
+  queue when local training finishes (FCFS) or its slice slot (BS).
+
+The simulator advances in polling cycles, applying the chosen DBA, and
+records per-client download/ready/upload-completion times. The round's
+synchronisation time is ``max_i upload_done_i + T_a``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import schedule_slots
+from repro.core.slicing import (
+    LIGHT_SPEED_FIBER,
+    ClientProfile,
+    SliceSpec,
+    compute_slice,
+)
+from repro.net.dba import (
+    DEFAULT_EFFICIENCY,
+    FCFSBestEffort,
+    OnuQueue,
+    SlicedDBA,
+)
+from repro.net.traffic import PoissonSource, background_rate_for_load
+
+EPS_BITS = 1.0
+
+
+@dataclass(frozen=True)
+class PONConfig:
+    n_onus: int = 128
+    line_rate_bps: float = 10e9      # symmetric up/down (paper §3)
+    distance_m: float = 20_000.0
+    cycle_time_s: float = 1e-3
+    efficiency: float = DEFAULT_EFFICIENCY
+    bg_burst_packets: float = 16.0
+
+    @property
+    def propagation_s(self) -> float:
+        return self.distance_m / LIGHT_SPEED_FIBER
+
+
+@dataclass
+class RoundResult:
+    policy: str
+    sync_time: float
+    dl_done: Dict[int, float]
+    ready: Dict[int, float]
+    ul_done: Dict[int, float]
+    compute_bound: float
+    load: float
+    slice_spec: Optional[SliceSpec] = None
+
+    @property
+    def comm_overhead(self) -> float:
+        return self.sync_time - self.compute_bound
+
+
+@dataclass
+class FLRoundWorkload:
+    """One round's FL inputs: involved clients with their compute times."""
+
+    clients: List[ClientProfile]
+    model_bits: float                # global model size (downlink)
+    t_aggregate: float = 0.0
+
+
+def _bg_push(queues, sources, t, cycle):
+    for q, src in zip(queues, sources):
+        q.push("bg", src.arrivals(cycle), t)
+
+
+def _mk_sources(cfg: PONConfig, bg_rate_bps: float, rng) -> List[PoissonSource]:
+    per_onu = bg_rate_bps / cfg.n_onus
+    return [
+        PoissonSource(per_onu, rng, burst_packets=cfg.bg_burst_packets)
+        for _ in range(cfg.n_onus)
+    ]
+
+
+def _settle(onu_id, fl_bits, clients, remaining, done, t, cfg):
+    """Attribute served FL bits to this ONU's clients, readiness order."""
+    for c in sorted(
+        (c for c in clients
+         if c.client_id % cfg.n_onus == onu_id and c.client_id in remaining),
+        key=lambda c: c.client_id,
+    ):
+        take = min(fl_bits, remaining[c.client_id])
+        remaining[c.client_id] -= take
+        fl_bits -= take
+        if remaining[c.client_id] <= EPS_BITS:
+            done[c.client_id] = t + cfg.cycle_time_s + cfg.propagation_s
+            del remaining[c.client_id]
+        if fl_bits <= EPS_BITS:
+            break
+
+
+def _downstream_phase(
+    cfg: PONConfig,
+    workload: FLRoundWorkload,
+    bg_rate_bps: float,
+    rng: np.random.Generator,
+    reserved: bool,
+    max_t: float = 600.0,
+) -> Dict[int, float]:
+    """Model distribution; returns per-client download-done time."""
+    clients = workload.clients
+    if reserved:
+        # BS: one reserved broadcast at (effective) line rate
+        t = (
+            workload.model_bits / (cfg.line_rate_bps * cfg.efficiency)
+            + cfg.propagation_s
+        )
+        return {c.client_id: t for c in clients}
+
+    queues = [OnuQueue(i) for i in range(cfg.n_onus)]
+    qmap = {q.onu_id: q for q in queues}
+    for c in clients:   # per-EC-node unicast copies enqueue at round start
+        qmap[c.client_id % cfg.n_onus].push("fl", workload.model_bits, 0.0)
+    sources = _mk_sources(cfg, bg_rate_bps, rng)
+    dba = FCFSBestEffort(
+        cfg.line_rate_bps, cfg.cycle_time_s, cfg.n_onus, cfg.efficiency
+    )
+    remaining = {c.client_id: workload.model_bits for c in clients}
+    done: Dict[int, float] = {}
+    t = 0.0
+    while remaining and t < max_t:
+        _bg_push(queues, sources, t, cfg.cycle_time_s)
+        for onu_id, g in dba.grant(queues).items():
+            q = qmap[onu_id]
+            if "bg" in g:
+                q.serve(g["bg"], kind="bg")
+            if "fl" in g:
+                q.serve(g["fl"], kind="fl")
+                _settle(onu_id, g["fl"], clients, remaining, done, t, cfg)
+        t += cfg.cycle_time_s
+    for cid in list(remaining):
+        done[cid] = t + cfg.propagation_s
+    return done
+
+
+def _upstream_phase(
+    cfg: PONConfig,
+    workload: FLRoundWorkload,
+    ready: Dict[int, float],
+    bg_rate_bps: float,
+    rng: np.random.Generator,
+    dba_mode: str,
+    slice_spec: Optional[SliceSpec] = None,
+    slots=None,
+    max_t: float = 600.0,
+) -> Dict[int, float]:
+    """Upload phase; returns per-client upload-done time."""
+    clients = workload.clients
+    queues = [OnuQueue(i) for i in range(cfg.n_onus)]
+    qmap = {q.onu_id: q for q in queues}
+    sources = _mk_sources(cfg, bg_rate_bps, rng)
+    if dba_mode == "bs":
+        dba = SlicedDBA(
+            cfg.line_rate_bps,
+            cfg.cycle_time_s,
+            cfg.n_onus,
+            slice_spec.bandwidth_bps,
+            slots,
+            cfg.efficiency,
+        )
+    else:
+        dba = FCFSBestEffort(
+            cfg.line_rate_bps, cfg.cycle_time_s, cfg.n_onus, cfg.efficiency
+        )
+
+    remaining = {c.client_id: c.m_ud_bits for c in clients}
+    pending = dict(ready)
+    done: Dict[int, float] = {}
+    t = 0.0
+    while remaining and t < max_t:
+        for cid, t_ready in list(pending.items()):
+            if t_ready <= t + cfg.cycle_time_s:
+                qmap[cid % cfg.n_onus].push("fl", remaining[cid], max(t_ready, t))
+                del pending[cid]
+        _bg_push(queues, sources, t, cfg.cycle_time_s)
+        grants = (
+            dba.grant(queues, t) if dba_mode == "bs" else dba.grant(queues)
+        )
+        for onu_id, g in grants.items():
+            q = qmap[onu_id]
+            if "bg" in g:
+                q.serve(g["bg"], kind="bg")
+            if "fl" in g:
+                q.serve(g["fl"], kind="fl")
+                _settle(onu_id, g["fl"], clients, remaining, done, t, cfg)
+        t += cfg.cycle_time_s
+    for cid in list(remaining):
+        done[cid] = t + cfg.propagation_s
+    return done
+
+
+def simulate_round(
+    cfg: PONConfig,
+    workload: FLRoundWorkload,
+    total_load: float,
+    policy: str,
+    seed: int = 0,
+    t_round_hint: float = 10.0,
+) -> RoundResult:
+    """Simulate one synchronisation round under ``policy`` in {fcfs, bs}."""
+    rng = np.random.default_rng(seed)
+    clients = workload.clients
+    n = len(clients)
+    # the training traffic's own average rate is part of the offered load
+    training_rate = (
+        n * (workload.model_bits + float(np.mean([c.m_ud_bits for c in clients])))
+        / max(t_round_hint, 1e-9)
+    )
+    bg_rate = background_rate_for_load(
+        total_load, cfg.line_rate_bps, training_rate
+    )
+
+    dl_done = _downstream_phase(
+        cfg, workload, bg_rate, rng, reserved=(policy == "bs")
+    )
+    ready = {c.client_id: dl_done[c.client_id] + c.t_ud for c in clients}
+    spec = slots = None
+    if policy == "bs":
+        # The OLT computed the slice from Φ at membership time; slice times
+        # are relative to the round start (t_current = 0, single round h·T=0).
+        profiles = [
+            ClientProfile(
+                client_id=c.client_id,
+                t_ud=c.t_ud,
+                t_dl=dl_done[c.client_id],
+                m_ud_bits=c.m_ud_bits,
+                distance_m=c.distance_m,
+            )
+            for c in clients
+        ]
+        spec = compute_slice(
+            profiles, t_current=0.0, t_round=0.0,
+            capacity_bps=cfg.line_rate_bps * cfg.efficiency, h=1,
+        )
+        slots = schedule_slots(profiles, spec, round_start=0.0)
+        ul_done = _upstream_phase(
+            cfg, workload, ready, bg_rate, rng, "bs", spec, slots
+        )
+    else:
+        ul_done = _upstream_phase(cfg, workload, ready, bg_rate, rng, "fcfs")
+
+    sync = max(ul_done.values()) + workload.t_aggregate
+    compute_bound = max(ready.values())
+    return RoundResult(
+        policy=policy,
+        sync_time=sync,
+        dl_done=dl_done,
+        ready=ready,
+        ul_done=ul_done,
+        compute_bound=compute_bound,
+        load=total_load,
+        slice_spec=spec,
+    )

@@ -1,0 +1,62 @@
+"""Background traffic sources (paper §3: Poisson background traffic).
+
+Arrivals are Poisson *bursts* of fixed-size packets (1500 B Ethernet frames).
+``burst_packets`` > 1 draws a geometric burst length per arrival — access
+traffic is bursty in practice and this is what makes FCFS queueing visibly
+load-dependent at PON time scales.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+PACKET_BITS = 1500 * 8
+
+
+@dataclass
+class PoissonSource:
+    rate_bps: float                 # offered load in bits/s
+    rng: np.random.Generator
+    packet_bits: float = PACKET_BITS
+    burst_packets: float = 16.0     # mean packets per burst (geometric)
+
+    def arrivals(self, dt_s: float) -> float:
+        """Bits arriving in a window of dt seconds."""
+        if self.rate_bps <= 0:
+            return 0.0
+        mean_burst_bits = self.packet_bits * self.burst_packets
+        burst_rate = self.rate_bps / mean_burst_bits     # bursts per second
+        n_bursts = self.rng.poisson(burst_rate * dt_s)
+        if n_bursts == 0:
+            return 0.0
+        lengths = self.rng.geometric(1.0 / self.burst_packets, size=n_bursts)
+        return float(lengths.sum()) * self.packet_bits
+
+
+def per_onu_sources(
+    total_rate_bps: float,
+    n_onus: int,
+    rng: np.random.Generator,
+    burst_packets: float = 16.0,
+) -> list:
+    """Split an aggregate offered load evenly across ONUs."""
+    rate = total_rate_bps / n_onus
+    return [
+        PoissonSource(rate_bps=rate, rng=rng, burst_packets=burst_packets)
+        for _ in range(n_onus)
+    ]
+
+
+def background_rate_for_load(
+    total_load: float,
+    line_rate_bps: float,
+    training_rate_bps: float = 0.0,
+) -> float:
+    """Offered background rate so that background + training == total load.
+
+    The paper: "The background traffic follows Poisson distribution, which
+    together with training traffic determines the total traffic load."
+    """
+    rate = total_load * line_rate_bps - training_rate_bps
+    return max(rate, 0.0)

@@ -1,0 +1,8 @@
+"""Optimizer substrate."""
+from repro.optim.optimizers import (  # noqa: F401
+    OptimizerConfig,
+    OptState,
+    apply_updates,
+    init_opt_state,
+)
+from repro.optim.schedules import constant, inverse_sqrt, warmup_cosine  # noqa: F401

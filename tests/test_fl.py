@@ -1,0 +1,163 @@
+"""FL substrate tests: aggregation, compression, selection, server rounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import (
+    Client,
+    CompressorConfig,
+    CPSServer,
+    FedBuffAggregator,
+    LocalTrainConfig,
+    SelectionConfig,
+    compress_delta,
+    compressed_update_bits,
+    fedadam_init,
+    fedadam_step,
+    fedavg,
+    select_clients,
+)
+from repro.models import cnn
+
+
+def tree(*vals):
+    return {"a": jnp.asarray(vals[0]), "b": {"c": jnp.asarray(vals[1])}}
+
+
+class TestFedAvg:
+    def test_weighted_average(self):
+        t1 = tree([1.0, 2.0], [[1.0]])
+        t2 = tree([3.0, 4.0], [[3.0]])
+        avg = fedavg([t1, t2], [1.0, 3.0])
+        np.testing.assert_allclose(avg["a"], [2.5, 3.5])
+        np.testing.assert_allclose(avg["b"]["c"], [[2.5]])
+
+    def test_permutation_invariance(self):
+        t1, t2, t3 = (tree([float(i)], [[float(i)]]) for i in range(3))
+        a = fedavg([t1, t2, t3], [1, 2, 3])
+        b = fedavg([t3, t1, t2], [3, 1, 2])
+        np.testing.assert_allclose(a["a"], b["a"])
+
+    def test_single_client_identity(self):
+        t1 = tree([1.5, -2.0], [[0.5]])
+        avg = fedavg([t1], [7.0])
+        np.testing.assert_allclose(avg["a"], t1["a"])
+
+    def test_fedadam_moves_toward_clients(self):
+        g = tree([0.0, 0.0], [[0.0]])
+        c = tree([1.0, 1.0], [[1.0]])
+        state = fedadam_init(g)
+        new_g, state = fedadam_step(g, state, [c], [1.0], lr=0.1)
+        assert float(new_g["a"][0]) > 0.0
+
+    def test_fedbuff_flush_at_capacity(self):
+        agg = FedBuffAggregator(buffer_size=2, server_lr=1.0)
+        g = tree([0.0], [[0.0]])
+        d = tree([1.0], [[1.0]])
+        assert not agg.add(d, weight=1.0)
+        assert agg.add(d, weight=1.0, staleness=3)
+        new_g = agg.flush(g)
+        assert agg.pending == 0
+        assert float(new_g["a"][0]) > 0.0
+
+
+class TestCompression:
+    def test_int8_roundtrip_bounded_error(self):
+        key = jax.random.PRNGKey(0)
+        delta = {"w": jax.random.normal(key, (256, 64))}
+        cfg = CompressorConfig(scheme="int8", error_feedback=False)
+        decoded, _, bits = compress_delta(delta, cfg)
+        scale = float(jnp.max(jnp.abs(delta["w"]))) / 127.0
+        err = float(jnp.max(jnp.abs(decoded["w"] - delta["w"])))
+        assert err <= scale * 0.5 + 1e-6
+        assert bits == 8 * delta["w"].size + 32
+
+    def test_error_feedback_accumulates_residual(self):
+        delta = {"w": jnp.full((64,), 0.001)}
+        cfg = CompressorConfig(scheme="topk", topk_frac=0.05,
+                               error_feedback=True)
+        decoded, err, _ = compress_delta(delta, cfg)
+        # what was not transmitted this round is carried in the error state
+        np.testing.assert_allclose(
+            np.asarray(decoded["w"] + err["w"]), np.asarray(delta["w"]),
+            rtol=1e-5,
+        )
+
+    def test_compression_shrinks_m_ud(self):
+        params = {"w": jnp.zeros((1000,))}
+        full = compressed_update_bits(params, CompressorConfig(scheme="none"))
+        int8 = compressed_update_bits(params, CompressorConfig(scheme="int8"))
+        topk = compressed_update_bits(
+            params, CompressorConfig(scheme="topk", topk_frac=0.05)
+        )
+        assert int8 < full / 3.9
+        assert topk <= full / 10
+
+
+class TestSelection:
+    def test_fraction_selection_count(self):
+        from repro.core.slicing import ClientProfile
+
+        clients = [ClientProfile(i, 1.0, 0.0, 1e6) for i in range(100)]
+        rng = np.random.default_rng(0)
+        sel = select_clients(
+            clients, SelectionConfig(strategy="fraction", fraction=0.25), rng
+        )
+        assert len(sel) == 25
+        assert len({c.client_id for c in sel}) == 25
+
+
+def _mk_server(n_clients=4, failure_prob=0.0, scheme="none"):
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_params(key, n_classes=10, width=1)
+    rng = np.random.default_rng(0)
+    clients = []
+    for i in range(n_clients):
+        imgs = rng.normal(size=(16, 28, 28, 1)).astype(np.float32)
+        labels = rng.integers(0, 10, size=16).astype(np.int32)
+        clients.append(
+            Client(
+                client_id=i,
+                data={"images": imgs, "labels": labels},
+                loss_fn=cnn.loss_fn,
+                cfg=LocalTrainConfig(lr=0.01, batch_size=8, local_epochs=1),
+                t_ud_s=1.0 + i,
+            )
+        )
+    return CPSServer(
+        global_params=params,
+        clients=clients,
+        compression=CompressorConfig(scheme=scheme),
+        failure_prob=failure_prob,
+        seed=0,
+    )
+
+
+class TestServer:
+    def test_round_updates_global_model(self):
+        server = _mk_server()
+        before = jax.tree.map(jnp.copy, server.global_params)
+        log = server.run_round()
+        assert log.n_arrived == 4
+        diffs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))),
+            before, server.global_params,
+        )
+        assert max(jax.tree.leaves(diffs)) > 0.0
+
+    def test_partial_aggregation_under_failures(self):
+        server = _mk_server(n_clients=8, failure_prob=0.5)
+        log = server.run_round()
+        assert 0 <= log.n_arrived <= 8
+        # training continues even with failures
+        log2 = server.run_round()
+        assert log2.round_index == 2
+
+    def test_compressed_rounds_converge_same_direction(self):
+        s_plain = _mk_server(scheme="none")
+        s_comp = _mk_server(scheme="int8")
+        l1 = [s_plain.run_round().mean_loss for _ in range(2)]
+        l2 = [s_comp.run_round().mean_loss for _ in range(2)]
+        assert l1[-1] < l1[0] * 1.5
+        assert l2[-1] < l2[0] * 1.5

@@ -1,0 +1,154 @@
+"""Model zoo tests: per-arch smoke (reduced config), decode parity, CNN."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import applicable_shapes, get_config, list_architectures
+from repro.configs.base import param_count
+from repro.models import cnn, lm
+
+ARCHS = list_architectures()
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    """Reduced same-family config: one forward + one SGD step on CPU."""
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(key, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["extra_embeds"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model)
+        )
+    logits, aux = lm.forward_train(params, cfg, tokens,
+                                   batch.get("extra_embeds"))
+    exp_seq = S + (cfg.n_frontend_tokens if cfg.frontend else 0)
+    assert logits.shape == (B, exp_seq, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    loss, grads = jax.value_and_grad(lambda p: lm.loss_fn(p, cfg, batch))(
+        params
+    )
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+    new_params = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    loss2 = lm.loss_fn(new_params, cfg, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch, key):
+    """prefill(S-1) + decode(1) == forward(S)[-1] — validates every cache."""
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(key, cfg)
+    B, S = 2, 17          # odd length stresses ring/window/chunk paths
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    extra = None
+    if cfg.frontend:
+        extra = jax.random.normal(key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    logits_full, _ = lm.forward_train(params, cfg, tokens, extra)
+    cache = lm.init_cache(cfg, B, 32)
+    _, cache = lm.prefill(params, cfg, tokens[:, :-1], cache, extra)
+    logits_d, _ = lm.decode_step(params, cfg, tokens[:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1]), np.asarray(logits_d[:, 0]),
+        atol=2e-3, rtol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_multi_token_decode_consistency(arch, key):
+    """Three sequential decode steps match the full forward logits."""
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(key, cfg)
+    B, S, n_dec = 1, 12, 3
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    extra = None
+    if cfg.frontend:
+        extra = jax.random.normal(key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    logits_full, _ = lm.forward_train(params, cfg, tokens, extra)
+    n_front = cfg.n_frontend_tokens if cfg.frontend else 0
+    cache = lm.init_cache(cfg, B, 32)
+    _, cache = lm.prefill(params, cfg, tokens[:, : S - n_dec], cache, extra)
+    for i in range(n_dec):
+        pos = S - n_dec + i
+        logits_d, cache = lm.decode_step(params, cfg, tokens[:, pos:pos + 1],
+                                         cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_full[:, n_front + pos]),
+            np.asarray(logits_d[:, 0]),
+            atol=2e-3, rtol=1e-2,
+        )
+
+
+def test_param_count_close_to_nominal():
+    """Analytic param counts should be in the right ballpark per arch."""
+    nominal = {
+        "llama3_8b": 8.0e9, "qwen3_14b": 14.8e9, "olmo_1b": 1.2e9,
+        "mamba2_780m": 0.78e9, "gemma3_12b": 12e9, "mixtral_8x22b": 141e9,
+        "arctic_480b": 482e9, "musicgen_large": 2.4e9,
+        "recurrentgemma_2b": 2.7e9, "pixtral_12b": 12.4e9,
+    }
+    for arch, approx in nominal.items():
+        total = param_count(get_config(arch))["total"]
+        assert total == pytest.approx(approx, rel=0.35), arch
+
+
+def test_long_context_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md skip list)."""
+    runs = {
+        a for a in ARCHS
+        if any(s.name == "long_500k"
+               for s in applicable_shapes(get_config(a)))
+    }
+    assert runs == {
+        "mamba2_780m", "recurrentgemma_2b", "gemma3_12b", "mixtral_8x22b"
+    }
+
+
+class TestCNN:
+    def test_forward_shape_and_loss(self):
+        key = jax.random.PRNGKey(0)
+        params = cnn.init_params(key)
+        imgs = jax.random.normal(key, (4, 28, 28, 1))
+        logits = cnn.forward(params, imgs)
+        assert logits.shape == (4, 62)
+        labels = jnp.array([0, 1, 2, 3])
+        loss = cnn.loss_fn(params, {"images": imgs, "labels": labels})
+        assert np.isfinite(float(loss))
+
+    def test_param_size_matches_paper_scale(self):
+        """LEAF CNN ~6.6 M params: 26.4 MB fp32 (the paper's 26.416 constant)."""
+        params = cnn.init_params(jax.random.PRNGKey(0))
+        mb = cnn.param_bytes(params) / 1e6
+        assert 24.0 < mb < 29.0
+
+
+@pytest.mark.parametrize("arch", ["arctic_480b", "gemma3_12b", "llama3_8b"])
+def test_int8_kv_cache_decode_parity(arch, key):
+    """Quantised KV cache: decode within ~1% of the exact logits."""
+    cfg = get_config(arch, smoke=True).replace(kv_cache_dtype="int8")
+    params = lm.init_params(key, cfg)
+    B, S = 2, 17
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (B, S), 0,
+                                cfg.vocab_size)
+    logits_full, _ = lm.forward_train(params, cfg, tokens)
+    cache = lm.init_cache(cfg, B, 32)
+    _, cache = lm.prefill(params, cfg, tokens[:, :-1], cache)
+    logits_d, _ = lm.decode_step(params, cfg, tokens[:, -1:], cache)
+    ref = np.asarray(logits_full[:, -1])
+    got = np.asarray(logits_d[:, 0])
+    rel = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+    assert rel < 0.05, rel

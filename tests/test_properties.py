@@ -1,0 +1,108 @@
+"""Hypothesis property-based tests for the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClientProfile,
+    compute_slice,
+    schedule_makespan,
+    schedule_slots,
+    validate_schedule,
+)
+from repro.core.round_model import bs_round_time
+from repro.fl.aggregation import fedavg
+
+C = 10e9
+
+client_lists = st.lists(
+    st.tuples(
+        st.floats(0.1, 30.0),        # t_ud
+        st.floats(0.0, 2.0),         # t_dl
+        st.floats(1e3, 1e9),         # m_ud bits
+    ),
+    min_size=1,
+    max_size=64,
+)
+
+
+def mk(profile_tuples):
+    return [
+        ClientProfile(client_id=i, t_ud=t, t_dl=d, m_ud_bits=m)
+        for i, (t, d, m) in enumerate(profile_tuples)
+    ]
+
+
+@settings(max_examples=200, deadline=None)
+@given(client_lists)
+def test_slice_invariants(profiles):
+    clients = mk(profiles)
+    spec = compute_slice(clients, t_current=0.0, t_round=60.0,
+                         capacity_bps=C, h=1)
+    # B never exceeds the uplink capacity (the paper's text constraint)
+    assert spec.bandwidth_bps <= C * (1 + 1e-9)
+    assert spec.bandwidth_bps > 0
+    # the window covers every client's readiness
+    assert spec.t_min <= min(c.delta for c in clients) + 1e-9
+    assert spec.t_max >= max(c.delta for c in clients) - 1e-9
+    assert spec.tau > 0
+    # the slice always has room for the total training traffic
+    total = sum(c.m_ud_bits for c in clients)
+    assert spec.bandwidth_bps * spec.tau >= total * (1 - 1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(client_lists)
+def test_schedule_invariants(profiles):
+    clients = mk(profiles)
+    spec = compute_slice(clients, 0.0, 0.0, C, h=1)
+    slots = schedule_slots(clients, spec, round_start=0.0)
+    validate_schedule(clients, slots, spec, round_start=0.0)
+    # every upload finishes within a bounded horizon of the window
+    makespan = schedule_makespan(slots)
+    drain = sum(c.m_ud_bits for c in clients) / spec.bandwidth_bps
+    assert makespan <= max(spec.t_max, spec.t_min + drain) + drain + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(client_lists)
+def test_bs_round_time_at_least_compute_bound(profiles):
+    clients = mk(profiles)
+    timing = bs_round_time(clients, C)
+    assert timing.sync_time >= timing.compute_bound - 1e-9
+    assert timing.comm_overhead >= -1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.lists(st.floats(-1e3, 1e3), min_size=3, max_size=3),
+        min_size=1, max_size=8,
+    ),
+    st.lists(st.floats(0.1, 100.0), min_size=8, max_size=8),
+)
+def test_fedavg_is_convex_combination(leaves, weights):
+    import jax.numpy as jnp
+
+    trees = [{"w": jnp.asarray(l)} for l in leaves]
+    w = weights[: len(trees)]
+    avg = fedavg(trees, w)
+    lo = np.min([l for l in leaves], axis=0)
+    hi = np.max([l for l in leaves], axis=0)
+    a = np.asarray(avg["w"])
+    assert (a >= lo - 1e-3).all() and (a <= hi + 1e-3).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 64))
+def test_quant_roundtrip_error_bound(n, blocks_pow):
+    import jax
+    from repro.kernels.quant.ref import roundtrip_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    block = min(64 * blocks_pow, 4096)
+    rt = roundtrip_ref(x, block=block)
+    amax = float(np.abs(np.asarray(x)).max()) if n else 0.0
+    assert float(np.abs(np.asarray(rt - x)).max()) <= amax / 127.0 * 0.5 + 1e-6

@@ -1,0 +1,153 @@
+"""Unit tests for the BS algorithm (Algorithm 1) and the slot scheduler."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClientProfile,
+    SliceManager,
+    compute_slice,
+    greedy_max_clients,
+    map_to_polling_cycles,
+    min_round_time,
+    schedule_makespan,
+    schedule_slots,
+    select_by_deadline,
+    validate_round_deadline,
+    validate_schedule,
+)
+
+C = 10e9
+M = 26.416e6
+
+
+def mk_clients(t_uds, m_bits=M, t_dl=0.01):
+    return [
+        ClientProfile(client_id=i, t_ud=t, t_dl=t_dl, m_ud_bits=m_bits)
+        for i, t in enumerate(t_uds)
+    ]
+
+
+class TestComputeSlice:
+    def test_window_matches_heterogeneity_gap(self):
+        clients = mk_clients([1.0, 3.0, 5.0])
+        spec = compute_slice(clients, t_current=0.0, t_round=10.0,
+                             capacity_bps=C, h=1)
+        assert spec.t_min == pytest.approx(1.01)
+        # t_max = max delta + nabla (straggler serialization + propagation)
+        nabla = M / C + 20e3 / 2e8
+        assert spec.t_max == pytest.approx(5.01 + nabla)
+        assert spec.tau == pytest.approx(spec.t_max - spec.t_min)
+
+    def test_bandwidth_is_demand_over_window(self):
+        clients = mk_clients([1.0, 5.0])
+        # the paper's line 8 exactly
+        spec_paper = compute_slice(clients, 0.0, 10.0, C, h=1,
+                                   sizing="paper")
+        assert spec_paper.bandwidth_bps == pytest.approx(
+            2 * M / spec_paper.tau
+        )
+        assert spec_paper.feasible
+        # default deadline sizing can only demand MORE (meets t_e)
+        spec = compute_slice(clients, 0.0, 10.0, C, h=1)
+        assert spec.bandwidth_bps >= spec_paper.bandwidth_bps - 1e-6
+        assert spec.demanded_bps >= 2 * M / spec.tau - 1e-6
+
+    def test_bandwidth_capped_at_capacity(self):
+        # nearly-homogeneous clients -> tiny window -> capped at C
+        clients = mk_clients([1.0, 1.0 + 1e-6] * 64)
+        spec = compute_slice(clients, 0.0, 10.0, C, h=1)
+        assert spec.bandwidth_bps <= C
+        assert not spec.feasible
+        # the window was widened so everything still fits at line rate
+        assert spec.tau >= (128 * M) / C * (1 - 1e-9)
+
+    def test_slice_times_include_round_offset(self):
+        clients = mk_clients([1.0, 2.0])
+        t_round = 7.5
+        spec = compute_slice(clients, t_current=100.0, t_round=t_round, h=3,
+                             capacity_bps=C)
+        assert spec.t_start == pytest.approx(100.0 + spec.t_min + 3 * t_round)
+        assert spec.t_end == pytest.approx(100.0 + spec.t_max + 3 * t_round)
+
+    def test_h_must_be_positive(self):
+        with pytest.raises(ValueError):
+            compute_slice(mk_clients([1.0]), 0.0, 1.0, C, h=0)
+
+    def test_empty_clients_rejected(self):
+        with pytest.raises(ValueError):
+            compute_slice([], 0.0, 1.0, C)
+
+    def test_round_deadline_validation(self):
+        clients = mk_clients([1.0, 5.0])
+        spec = compute_slice(clients, 0.0, 10.0, C, h=1)
+        assert validate_round_deadline(clients, spec, t_round=10.0)
+        assert not validate_round_deadline(clients, spec, t_round=1.0)
+        assert min_round_time(clients, C) == pytest.approx(spec.t_max)
+
+
+class TestScheduler:
+    def test_slots_satisfy_invariants(self):
+        rng = np.random.default_rng(0)
+        clients = mk_clients(rng.uniform(1, 5, 32))
+        spec = compute_slice(clients, 0.0, 0.0, C, h=1)
+        slots = schedule_slots(clients, spec, round_start=0.0)
+        validate_schedule(clients, slots, spec, round_start=0.0)
+
+    def test_makespan_close_to_t_max(self):
+        # with B = sum M / tau, back-to-back slots end near the window end
+        rng = np.random.default_rng(1)
+        clients = mk_clients(rng.uniform(1, 5, 128))
+        spec = compute_slice(clients, 0.0, 0.0, C, h=1)
+        slots = schedule_slots(clients, spec, round_start=0.0)
+        makespan = schedule_makespan(slots)
+        assert makespan <= spec.t_max + spec.duration * 0.5
+        assert makespan >= spec.t_min
+
+    def test_polling_cycle_grants_conserve_bits(self):
+        clients = mk_clients([1.0, 2.0, 4.0])
+        spec = compute_slice(clients, 0.0, 0.0, C, h=1)
+        slots = schedule_slots(clients, spec, round_start=0.0)
+        grants = map_to_polling_cycles(slots, spec, cycle_time_s=1e-3)
+        per_client = {}
+        for g in grants:
+            per_client[g.client_id] = per_client.get(g.client_id, 0.0) + g.bits
+        for c in clients:
+            assert per_client[c.client_id] == pytest.approx(
+                c.m_ud_bits, rel=1e-6
+            )
+
+
+class TestMembership:
+    def test_slice_recomputed_only_on_change(self):
+        mgr = SliceManager(capacity_bps=C, t_round=10.0)
+        mgr.bootstrap(mk_clients([1.0, 2.0]))
+        assert mgr.recompute_count == 1
+        for t in range(5):
+            mgr.on_round(float(t))
+        assert mgr.recompute_count == 1          # rounds don't retrigger
+        mgr.join(ClientProfile(99, 3.0, 0.01, M), t_now=5.0)
+        assert mgr.recompute_count == 2
+        mgr.leave(99, t_now=6.0)
+        assert mgr.recompute_count == 3
+        mgr.leave(12345, t_now=7.0)              # unknown: no-op
+        assert mgr.recompute_count == 3
+
+    def test_all_leave_clears_slice(self):
+        mgr = SliceManager(capacity_bps=C, t_round=10.0)
+        mgr.bootstrap(mk_clients([1.0]))
+        mgr.leave(0, t_now=1.0)
+        assert mgr.current_slice is None
+
+
+class TestDeadline:
+    def test_deadline_filters_stragglers(self):
+        clients = mk_clients([1.0, 2.0, 9.0])
+        sel, dropped = select_by_deadline(clients, deadline_s=5.0,
+                                          uplink_bps=C)
+        assert {c.client_id for c in sel} == {0, 1}
+        assert {c.client_id for c in dropped} == {2}
+
+    def test_greedy_packs_in_readiness_order(self):
+        clients = mk_clients([1.0, 1.1, 1.2, 50.0])
+        chosen = greedy_max_clients(clients, deadline_s=5.0, uplink_bps=C)
+        assert {c.client_id for c in chosen} == {0, 1, 2}

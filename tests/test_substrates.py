@@ -1,0 +1,148 @@
+"""Substrate tests: optimizers, checkpointing (fault tolerance), data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruption,
+    CheckpointManager,
+    load,
+    save,
+)
+from repro.data import TokenBatcher, femnist_like, lm_tokens, partition_tokens
+from repro.optim import (
+    OptimizerConfig,
+    apply_updates,
+    constant,
+    init_opt_state,
+    inverse_sqrt,
+    warmup_cosine,
+)
+
+
+def quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": {"x": jnp.array([[1.5]])}}
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+    def test_descends_quadratic(self, name):
+        cfg = OptimizerConfig(name=name, lr=0.1, weight_decay=0.0,
+                              grad_clip=0.0)
+        params = quad_params()
+        state = init_opt_state(params, cfg)
+
+        def loss(p):
+            return sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(p))
+
+        l0 = float(loss(params))
+        for _ in range(50):
+            grads = jax.grad(loss)(params)
+            params, state, _ = apply_updates(params, grads, state, cfg)
+        assert float(loss(params)) < 0.2 * l0
+
+    def test_grad_clip_bounds_update(self):
+        cfg = OptimizerConfig(name="sgd", lr=1.0, grad_clip=1.0)
+        params = {"w": jnp.zeros((3,))}
+        state = init_opt_state(params, cfg)
+        grads = {"w": jnp.array([100.0, 0.0, 0.0])}
+        new_params, _, gnorm = apply_updates(params, grads, state, cfg)
+        assert float(gnorm) == pytest.approx(100.0)
+        assert float(jnp.abs(new_params["w"]).max()) <= 1.0 + 1e-6
+
+    def test_schedules(self):
+        s = warmup_cosine(1.0, 10, 100)
+        assert float(s(jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(s(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+        assert float(s(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+        s2 = inverse_sqrt(1.0, 100)
+        assert float(s2(jnp.asarray(400))) == pytest.approx(0.5, rel=1e-3)
+        assert float(constant(0.3)(jnp.asarray(5))) == pytest.approx(0.3)
+
+
+class TestCheckpoint:
+    def test_save_load_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+        path = str(tmp_path / "t.ckpt")
+        save(path, tree, metadata={"step": 7})
+        restored, meta = load(path, like=tree)
+        assert meta["step"] == 7
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_corruption_detected(self, tmp_path):
+        tree = {"a": jnp.arange(100, dtype=jnp.float32)}
+        path = str(tmp_path / "t.ckpt")
+        save(path, tree)
+        raw = bytearray(open(path, "rb").read())
+        raw[-10] ^= 0xFF                      # flip a payload bit
+        open(path, "wb").write(raw)
+        with pytest.raises(CheckpointCorruption):
+            load(path, like=tree)
+
+    def test_manager_resumes_latest_valid(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5, use_async=False)
+        tree = {"a": jnp.zeros((4,))}
+        for step in (1, 2, 3):
+            mgr.save(step, jax.tree.map(lambda l: l + step, tree),
+                     metadata={})
+        # corrupt the newest checkpoint: restore must fall back to step 2
+        p3 = os.path.join(str(tmp_path), "step_3.ckpt")
+        raw = bytearray(open(p3, "rb").read())
+        raw[-1] ^= 0xFF
+        open(p3, "wb").write(raw)
+        restored, meta = mgr.restore_latest(like=tree)
+        assert meta["step"] == 2
+        assert float(restored["a"][0]) == 2.0
+
+    def test_rotation(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, use_async=False)
+        for step in range(5):
+            mgr.save(step, {"a": jnp.zeros(1)})
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_writer(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, use_async=True)
+        mgr.save(1, {"a": jnp.arange(5, dtype=jnp.float32)})
+        mgr.wait()
+        restored, _ = mgr.restore_latest(like={"a": jnp.zeros(5)})
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.arange(5, dtype=np.float32))
+
+
+class TestData:
+    def test_femnist_like_partitions(self):
+        writers, test = femnist_like(n_writers=8, samples_per_writer=32,
+                                     seed=0)
+        assert len(writers) == 8
+        for w in writers:
+            assert w["images"].shape == (32, 28, 28, 1)
+            assert w["labels"].min() >= 0 and w["labels"].max() < 62
+        # non-IID: writers have different label distributions
+        h0 = np.bincount(writers[0]["labels"], minlength=62)
+        h1 = np.bincount(writers[1]["labels"], minlength=62)
+        assert not np.array_equal(h0, h1)
+
+    def test_lm_tokens_and_batcher(self):
+        toks = lm_tokens(10_000, vocab_size=97, seed=0)
+        assert toks.min() >= 0 and toks.max() < 97
+        b = TokenBatcher(toks, global_batch=4, seq_len=16, seed=0)
+        batch = next(iter(b))
+        assert batch["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(
+            batch["tokens"][:, 1:], batch["labels"][:, :-1]
+        )
+
+    def test_partition_tokens_disjoint(self):
+        toks = np.arange(10_000, dtype=np.int32)
+        shards = partition_tokens(toks, n_clients=4, seq_len=9)
+        seen = set()
+        for s in shards:
+            flat = set(s.reshape(-1).tolist())
+            assert not (seen & flat)
+            seen |= flat
