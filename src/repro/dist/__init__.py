@@ -1,0 +1,38 @@
+"""Distribution layer: sharding rules + sharded step functions.
+
+The repo maps the paper's edge topology onto a TPU-style device mesh
+(DESIGN.md §3): each EC-node site is one *pod* of the mesh, the BS slice
+carries the cross-pod FedAvg traffic, and inside a pod the usual
+data/tensor parallel axes apply. Two modules implement that mapping:
+
+``repro.dist.sharding``
+    Pure spec logic — ``PartitionSpec`` rules for parameters, optimizer
+    moments, batches and KV caches over the ``("pod", "data", "model")``
+    mesh from ``repro.launch.mesh``. No device state is touched, so the
+    rules work on ``AbstractMesh`` (tests) and real meshes alike.
+
+``repro.dist.stepfns``
+    Jit-able step functions built on those rules: single-pod train step,
+    per-pod federated train step (local SGD with grad accumulation),
+    cross-pod FedAvg round step with int8/top-k update compression
+    (``repro.dist.fedops``), and the prefill/decode serving steps.
+"""
+from repro.dist import fedops, sharding, stepfns  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    batch_spec,
+    cache_specs,
+    opt_moment_specs,
+    param_spec,
+    param_specs,
+)
+from repro.dist.stepfns import (  # noqa: F401
+    TrainState,
+    fed_update_bits,
+    init_fed_state,
+    init_train_state,
+    make_decode_step,
+    make_fed_round_step,
+    make_fed_train_step,
+    make_prefill_step,
+    make_train_step,
+)

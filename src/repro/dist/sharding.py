@@ -1,0 +1,253 @@
+"""PartitionSpec rules for the ("pod", "data", "model") mesh.
+
+Everything here is pure spec logic keyed on parameter *path names* and
+shapes — no device state — so the same rules drive the AbstractMesh
+contract tests, the dry-run lowering on 512 placeholder devices, and the
+host-mesh integration tests.
+
+The rules (Megatron/GSPMD conventions):
+
+* **column-parallel** (default for matrices): shard the output features
+  (last dim) over ``model`` — ``wq``/``wk``/``wv``, MLP up/gate, SSD
+  ``in_proj``, …
+* **row-parallel** for output projections (``wo``, ``w_down``,
+  ``out_proj``, ``w_out``): shard the input features (dim −2) over
+  ``model`` so the preceding column-parallel activations feed it without
+  a gather.
+* **embeddings**: vocab-sharded over ``model`` when the vocab size
+  divides the axis; otherwise fall back to sharding ``d_model`` (mamba2's
+  50280 vocab is not 16-divisible).
+* **MoE stacks**: expert-parallel — the expert dim over ``model`` — when
+  ``n_experts`` divides the axis (arctic's 128); otherwise tensor-shard
+  within each expert like a plain matrix (mixtral's 8 < 16).
+* **FSDP** (``cfg.fsdp``): additionally shard the complementary matrix
+  dim over ``data``. ``opt_moment_specs`` applies the same treatment for
+  ``cfg.zero_opt`` so Adam moments are ZeRO-sharded even when parameters
+  are not.
+* **norm scales/biases and other vectors replicate** — they are tiny and
+  every ``model`` shard needs them.
+
+A leading ``units`` path component marks the stacked-layer axis from the
+scan-over-units model; it is never sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# output projections whose *input* features are model-sharded
+ROW_PARALLEL = ("wo", "w_down", "out_proj", "w_out")
+# vector-ish leaves that always replicate (rank rule catches most; these
+# names guard against future 2-D gains/biases)
+REPLICATED = ("scale", "bias", "lam", "a_log", "dt_bias", "d_skip")
+
+
+def _axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return int(dict(mesh.shape)[name])
+
+
+def _axis_or_none(mesh, name: str):
+    return name if name in mesh.axis_names else None
+
+
+def _path_names(path) -> List[str]:
+    """KeyPath entries -> plain strings ('units', 'b0', 'mixer', 'wq')."""
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+        elif hasattr(entry, "idx"):
+            names.append(str(entry.idx))
+        else:
+            names.append(str(entry))
+    return names
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+def param_spec(
+    path_names: Sequence[Any],
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    mesh,
+    *,
+    fsdp: bool | None = None,
+) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``path_names`` is the pytree path as strings (e.g. ``["units", "b0",
+    "mixer", "wq"]``), ``shape`` the full leaf shape (including the
+    stacked-units axis when present). ``fsdp=None`` defers to
+    ``cfg.fsdp``; pass an explicit bool to override (ZeRO moments).
+    """
+    names = [str(n) for n in path_names]
+    leaf = names[-1] if names else ""
+    ndim = len(shape)
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    model_ax = _axis_or_none(mesh, "model")
+    data_ax = _axis_or_none(mesh, "data")
+    use_fsdp = bool(cfg.fsdp) if fsdp is None else bool(fsdp)
+    lead = 1 if names and names[0] == "units" else 0
+
+    # vectors, scalars, norm gains: replicate
+    if (
+        ndim - lead < 2
+        or leaf in REPLICATED
+        or any("norm" in n for n in names)
+    ):
+        return P(None)
+
+    # embeddings / untied head: vocab-sharded with d_model fallback
+    if leaf in ("embed", "lm_head"):
+        v_ax, d_ax = (0, 1) if leaf == "embed" else (1, 0)
+        entries: List[Any] = [None, None]
+        if model_ax is not None and shape[v_ax] % model == 0:
+            entries[v_ax] = model_ax
+        elif model_ax is not None and shape[d_ax] % model == 0:
+            entries[d_ax] = model_ax
+        if use_fsdp and data_ax is not None:
+            free = v_ax if entries[v_ax] is None else d_ax
+            if entries[free] is None and shape[free] % data == 0:
+                entries[free] = data_ax
+        return P(*entries)
+
+    # MoE expert stacks: expert-parallel when the axis divides, else
+    # tensor-shard within each expert
+    if cfg.moe is not None and "moe" in names and leaf in (
+        "w_gate", "w_up", "w_down"
+    ):
+        E = cfg.moe.n_experts
+        e_ax = next(
+            (i for i in range(lead, ndim - 2) if shape[i] == E), None
+        )
+        if e_ax is not None:
+            entries = [None] * ndim
+            if model_ax is not None and E % model == 0:
+                entries[e_ax] = model_ax
+                if use_fsdp and data_ax is not None:
+                    for i in range(e_ax + 1, ndim):
+                        if shape[i] % data == 0:
+                            entries[i] = data_ax
+                            break
+                return P(*entries)
+            # fall through to the generic matrix rule below
+        # (router and non-expert-dim leaves also use the generic rule)
+
+    # generic matrices: column-parallel by default, row-parallel for
+    # output projections; FSDP shards the complementary dim over data
+    entries = [None] * ndim
+    row = leaf in ROW_PARALLEL
+    m_ax = ndim - 2 if row else ndim - 1
+    f_ax = ndim - 1 if row else ndim - 2
+    if model_ax is not None and shape[m_ax] % model == 0:
+        entries[m_ax] = model_ax
+    if (
+        use_fsdp
+        and data_ax is not None
+        and f_ax >= lead
+        and entries[f_ax] is None
+        and shape[f_ax] % data == 0
+    ):
+        entries[f_ax] = data_ax
+    return P(*entries)
+
+
+def param_specs(params, cfg: ModelConfig, mesh, *, fsdp: bool | None = None):
+    """PartitionSpec tree for a parameter pytree (path-name driven)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(
+            _path_names(path), tuple(leaf.shape), cfg, mesh, fsdp=fsdp
+        ),
+        params,
+    )
+
+
+def opt_moment_specs(moments, cfg: ModelConfig, mesh):
+    """Specs for Adam/momentum moment trees (mirror the params).
+
+    With ``cfg.zero_opt`` the moments get the FSDP data-axis treatment
+    even when the parameters themselves are not FSDP-sharded — classic
+    ZeRO partitioning of optimizer state.
+    """
+    return param_specs(
+        moments, cfg, mesh, fsdp=bool(cfg.fsdp or cfg.zero_opt)
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh, batch: int) -> Tuple[str, ...]:
+    """Largest ("pod","data") prefix-trimmed combo that divides ``batch``."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes:
+        prod = math.prod(_axis_size(mesh, a) for a in axes)
+        if prod and batch % prod == 0:
+            return tuple(axes)
+        axes = axes[1:]  # drop the pod axis first, then data
+    return ()
+
+
+def _batch_entry(mesh, batch: int):
+    axes = _batch_axes(mesh, batch)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    """Spec for a (B, ...) batch array: B over the pod+data axes."""
+    entry = _batch_entry(mesh, global_batch)
+    return P() if entry is None else P(entry)
+
+
+def cache_specs(cache_shapes, cfg: ModelConfig, mesh, global_batch: int):
+    """Specs for the serving cache pytree from ``repro.models.lm``.
+
+    Batch dim over the pod+data axes; the fused kv-head/feature dim of
+    ``k``/``v`` (and conv/recurrent states) over ``model`` — matching the
+    column-parallel projection output so decode never gathers the cache.
+    SSD states shard their head dim instead (``d_state`` stays local to
+    the chunk recurrence).
+    """
+    model = _axis_size(mesh, "model")
+    model_ax = _axis_or_none(mesh, "model")
+    b_entry = _batch_entry(mesh, global_batch)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        leaf_name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        if ndim == 0 or leaf_name == "pos":
+            return P()
+        lead = 1 if names and names[0] == "units" else 0
+        entries: List[Any] = [None] * ndim
+        if lead < ndim and b_entry is not None and shape[lead] == global_batch:
+            entries[lead] = b_entry
+        if model_ax is not None and ndim - lead >= 2:
+            if leaf_name == "h" and ndim - lead == 4:
+                # SSD state (B, n_heads, d_head, d_state): shard heads
+                if shape[lead + 1] % model == 0:
+                    entries[lead + 1] = model_ax
+            elif leaf_name in ("k", "v", "conv", "h"):
+                if shape[-1] % model == 0:
+                    entries[-1] = model_ax
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,218 @@
+"""Sharded step functions: train, federated train/round, prefill, decode.
+
+All step functions are pure and jit-able; sharding comes from the caller
+(``jax.jit`` in/out shardings built by ``repro.launch.specs`` from the
+rules in ``repro.dist.sharding``), so the same code runs on one host
+device, the 8-device test mesh and the 512-chip production mesh.
+
+Federated layout: every leaf of a federated ``TrainState`` carries a
+leading ``n_pods`` axis, sharded over the ``pod`` mesh axis (one pod per
+EC-node site, DESIGN.md §3). ``make_fed_train_step`` vmaps the single-pod
+step over that axis — local SGD with no cross-pod traffic — and
+``make_fed_round_step`` performs the weighted FedAvg reduction whose
+upload payload (``M_i^UD``) the paper's BS slice is provisioned for.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import fedops
+from repro.fl.compression import CompressorConfig, compressed_update_bits
+from repro.models import lm
+from repro.optim.optimizers import (
+    OptimizerConfig,
+    OptState,
+    apply_updates,
+    init_opt_state,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+# ---------------------------------------------------------------------------
+# state init
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(key, cfg: ModelConfig,
+                     opt_cfg: OptimizerConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg))
+
+
+def init_fed_state(key, cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                   n_pods: int) -> TrainState:
+    """Replicate one init across a leading ``n_pods`` axis on every leaf.
+
+    All pods start each experiment from the same global model (the CPS
+    broadcast); they diverge through local steps and re-sync at rounds.
+    """
+    base = init_train_state(key, cfg, opt_cfg)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_pods,) + l.shape), base
+    )
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    schedule: Optional[Callable] = None,
+) -> Callable:
+    """Single-pod SGD step with microbatch grad accumulation.
+
+    ``step(state, batch) -> (state, metrics)`` where batch leaves are
+    ``(B, ...)``; with ``cfg.grad_accum > 1`` the batch is split into
+    ``grad_accum`` microbatches scanned sequentially (grads averaged in
+    fp32), so the global batch fits regardless of per-device memory.
+    """
+    accum = max(int(cfg.grad_accum), 1)
+
+    def loss_of(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+
+    def step(state: TrainState, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum, x.shape[0] // accum) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def body(carry, mb):
+                g_sum, l_sum = carry
+                loss, g = jax.value_and_grad(loss_of)(state.params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_sum, g
+                )
+                return (g_sum, l_sum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (g_sum, l_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(
+                lambda g, p: (g / accum).astype(p.dtype),
+                g_sum, state.params,
+            )
+            loss = l_sum / accum
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+
+        lr = jnp.asarray(
+            schedule(state.opt.step) if schedule is not None else opt_cfg.lr,
+            jnp.float32,
+        )
+        params, opt, gnorm = apply_updates(
+            state.params, grads, state.opt, opt_cfg, lr=lr
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=params, opt=opt), metrics
+
+    return step
+
+
+def make_fed_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    schedule: Optional[Callable] = None,
+) -> Callable:
+    """Per-pod local step over the federated (pod-stacked) state.
+
+    ``batch`` leaves are ``(n_pods, per_pod_B, ...)``; the single-pod
+    step is vmapped over the pod axis, so under the ``("pod", "data",
+    "model")`` mesh each pod trains on its own shard with zero cross-pod
+    communication — exactly the paper's local-epoch phase.
+    """
+    base = make_train_step(cfg, opt_cfg, schedule)
+
+    def step(state: TrainState, batch):
+        return jax.vmap(base)(state, batch)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# federated round (the M_i^UD traffic)
+# ---------------------------------------------------------------------------
+
+
+def make_fed_round_step(cfg: ModelConfig, compress: Optional[str] = None,
+                        topk_frac: float = 0.05) -> Callable:
+    """Weighted FedAvg across the pod axis (``repro.fl.aggregation``
+    semantics, expressed as one cross-pod reduce).
+
+    ``round_step(state, weights) -> state`` with ``weights`` shaped
+    ``(n_pods,)`` (client data sizes). ``compress`` in
+    ``{None, "none", "int8", "topk", "int8+topk"}`` round-trips each
+    pod's update through ``repro.fl.compression`` before averaging.
+    Optimizer moments stay pod-local (local adaptive state), mirroring
+    the host-side CPS which only ships model weights.
+
+    The wire size of the upload this step implies is
+    ``fed_update_bits(cfg, compress)`` — the co-sim's slice sizing
+    derives from that, not from a hard-coded constant.
+    """
+    scheme = fedops.check_scheme(compress)
+
+    def round_step(state: TrainState, weights) -> TrainState:
+        params = fedops.fedavg_pods(
+            state.params, weights, scheme=scheme, topk_frac=topk_frac
+        )
+        return TrainState(params=params, opt=state.opt)
+
+    return round_step
+
+
+def fed_update_bits(cfg: ModelConfig, compress: Optional[str] = "int8",
+                    topk_frac: float = 0.05) -> int:
+    """Wire bits of ONE pod's upload under ``compress`` (``M_i^UD``).
+
+    Derived from the real parameter tree via ``eval_shape`` (no
+    allocation) and ``repro.fl.compression``'s accounting, so the co-sim
+    slice demand tracks the actual sharded update payload.
+    """
+    scheme = fedops.check_scheme(compress)
+    params = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    comp = CompressorConfig(scheme=scheme, topk_frac=topk_frac)
+    return compressed_update_bits(params, comp)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """``step(params, tokens, cache, extra_embeds=None) -> (logits, cache)``."""
+
+    def step(params, tokens, cache, extra_embeds=None):
+        return lm.prefill(params, cfg, tokens, cache, extra_embeds)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """``step(params, token, cache) -> (logits, cache)`` — one token."""
+
+    def step(params, token, cache):
+        return lm.decode_step(params, cfg, token, cache)
+
+    return step

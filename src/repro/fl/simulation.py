@@ -23,9 +23,30 @@ from repro.fl.server import CPSServer
 class CoSimConfig:
     policy: str = "bs"              # "bs" | "fcfs"
     total_load: float = 0.8
-    model_bits: float = 26.416e6    # paper's CNN update size
+    model_bits: float = 26.416e6    # global model size (fp32 downlink)
+    upload_bits: Optional[float] = None  # per-client M_i^UD; None = model_bits
     pon: PONConfig = field(default_factory=PONConfig)
     timing_seeds: int = 2           # average the net-sim over this many seeds
+
+    @classmethod
+    def from_fed_model(cls, model_cfg, compress: str = "int8", **kw):
+        """Size the slice from the real sharded update payload.
+
+        Instead of the paper's hard-coded CNN constant, ``model_bits``
+        becomes the fp32 wire size of the global model (the server's
+        full-precision downlink broadcast) and ``upload_bits`` the size
+        of one pod's *compressed* upload
+        (``repro.dist.stepfns.fed_update_bits``) — so slice provisioning
+        tracks whatever architecture/compression the pods actually
+        train.
+        """
+        from repro.dist.stepfns import fed_update_bits  # avoid import cycle
+
+        return cls(
+            model_bits=float(fed_update_bits(model_cfg, "none")),
+            upload_bits=float(fed_update_bits(model_cfg, compress)),
+            **kw,
+        )
 
 
 @dataclass
@@ -84,7 +105,11 @@ class FLNetworkCoSim:
         sync = 0.0
         for _ in range(n_rounds):
             log = self.server.run_round(eval_fn=eval_fn)
-            m_bits = self.cfg.model_bits
+            m_bits = (
+                self.cfg.upload_bits
+                if self.cfg.upload_bits is not None
+                else self.cfg.model_bits
+            )
             if update_bits_from_compression and log.n_arrived:
                 m_bits = log.update_bits / max(log.n_arrived, 1)
             profiles = [

@@ -158,6 +158,8 @@ def run_cell(
         rec["compile_s"] = round(time.time() - t1, 2)
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jaxlib: one dict per device
+            cost = cost[0] if cost else {}
         rec["cost_analysis"] = {
             k: float(v)
             for k, v in cost.items()

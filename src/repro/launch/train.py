@@ -95,16 +95,20 @@ def train(
                 start_round = int(meta.get("round", 0))
                 print(f"resumed from round {start_round}")
 
-        # PON timing for the round (the paper's co-simulation)
+        # PON timing for the round (the paper's co-simulation); the slice
+        # is sized for the measured payloads, not the paper's CNN
+        # constant: compressed per-pod uplink, fp32 broadcast downlink
+        up_bits = float(stepfns.fed_update_bits(cfg, compress))
+        down_bits = float(stepfns.fed_update_bits(cfg, "none"))
         rng = np.random.default_rng(0)
         profiles = [
             ClientProfile(client_id=i, t_ud=float(t), t_dl=0.0,
-                          m_ud_bits=26.416e6)
+                          m_ud_bits=up_bits)
             for i, t in enumerate(rng.uniform(1.0, 5.0, max(pods, 2)))
         ]
         pon = PONConfig(n_onus=max(8, pods))
         sync = simulate_round(
-            pon, FLRoundWorkload(clients=profiles, model_bits=26.416e6),
+            pon, FLRoundWorkload(clients=profiles, model_bits=down_bits),
             load, policy, seed=0,
         ).sync_time
 
@@ -141,11 +145,14 @@ def train(
                 mgr.save(rnd + 1, state, metadata={"round": rnd + 1})
         if mgr is not None:
             mgr.wait()
-        print(
-            f"done: {rounds} rounds, final loss "
-            f"{history[-1]['loss']:.4f}, simulated FL wall-clock "
-            f"{wall_simulated:.1f}s ({policy} @ load {load})"
-        )
+        if history:
+            print(
+                f"done: {rounds} rounds, final loss "
+                f"{history[-1]['loss']:.4f}, simulated FL wall-clock "
+                f"{wall_simulated:.1f}s ({policy} @ load {load})"
+            )
+        else:
+            print(f"nothing to do: resumed at round {start_round}/{rounds}")
         return state, history
 
 

@@ -26,7 +26,10 @@ class TestShardingRules:
         # use jax's AbstractMesh for pure spec logic
         from jax.sharding import AbstractMesh
 
-        cls.MESH = AbstractMesh((16, 16), ("data", "model"))
+        try:
+            cls.MESH = AbstractMesh((16, 16), ("data", "model"))
+        except TypeError:  # jax<=0.4.x: (name, size) pair signature
+            cls.MESH = AbstractMesh((("data", 16), ("model", 16)))
 
     def spec(self, names, shape, cfg, **kw):
         return param_spec(names, shape, cfg, self.MESH, **kw)
