@@ -9,8 +9,14 @@ import time
 
 import numpy as np
 
-from repro.core.scheduler import map_to_polling_cycles, schedule_slots
+from repro.core.scheduler import (
+    map_to_polling_cycles,
+    schedule_slots,
+    slots_to_arrays,
+)
 from repro.core.slicing import ClientProfile, compute_slice
+
+TIER = "fast"
 
 M = 26.416e6
 
@@ -51,6 +57,37 @@ def run() -> list:
             "name": "bs_polling_cycle_mapping_n128",
             "us_per_call": (time.time() - t0) * 1e6,
             "derived": f"grants={len(grants)}",
+        }
+    )
+    t0 = time.time()
+    arrays = slots_to_arrays(slots)
+    rows.append(
+        {
+            "name": "bs_slots_to_arrays_n128",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": f"slots={len(arrays['client_id'])}",
+        }
+    )
+    # one full BS round on the vectorized engine (slice + slots + queues)
+    from repro.net import FLRoundWorkload, PONConfig, SweepCase, \
+        simulate_round_sweep
+
+    wl = FLRoundWorkload(
+        clients=[ClientProfile(client_id=c.client_id, t_ud=c.t_ud,
+                               t_dl=0.0, m_ud_bits=c.m_ud_bits)
+                 for c in clients],
+        model_bits=M,
+    )
+    t0 = time.time()
+    r = simulate_round_sweep(
+        PONConfig(n_onus=128),
+        [SweepCase(workload=wl, load=0.8, policy="bs", seed=0)],
+    )[0]
+    rows.append(
+        {
+            "name": "bs_engine_round_n128",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": f"sync_s={r.sync_time:.3f}",
         }
     )
     return rows

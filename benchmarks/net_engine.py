@@ -1,0 +1,200 @@
+"""Engine throughput + reference-vs-vectorized wall-clock for the Fig 2b sweep.
+
+Records the perf trajectory of the PON co-simulation:
+
+* ``rounds/sec`` of the vectorized engine at n_onus in {128, 512, 2048}
+  (line rate scaled with the ONU count so the offered load stays
+  feasible and rounds keep the paper's ~5 s shape);
+* before/after wall-clock of the full 16-cell Fig 2b sweep — the
+  reference cycle-by-cycle simulator vs one stacked engine simulation.
+
+``python benchmarks/net_engine.py --full --json BENCH_net_engine.json``
+measures the reference on the *full* sweep (minutes) and writes the
+checked-in JSON; the harness ``run()`` times the reference on a single
+representative cell so the fast benchmark tier stays fast.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.slicing import ClientProfile
+from repro.net import (
+    FLRoundWorkload,
+    PONConfig,
+    SweepCase,
+    simulate_round,
+    simulate_round_sweep,
+)
+
+TIER = "fast"
+
+M_BITS = 26.416e6
+N_ONUS = 128
+
+
+def _clients(n, n_onus, seed=42):
+    rng = np.random.default_rng(seed)
+    t_uds = rng.uniform(1.0, 5.0, n_onus)
+    return [
+        ClientProfile(client_id=i, t_ud=float(t_uds[i]), t_dl=0.0,
+                      m_ud_bits=M_BITS)
+        for i in range(n)
+    ]
+
+
+def _fig2b_cases(seed=1):
+    try:
+        from benchmarks.fig2b_sync_time import sweep_cases
+    except ModuleNotFoundError:  # invoked as a script, not via the harness
+        import os
+        import sys
+
+        sys.path.insert(
+            0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+        from benchmarks.fig2b_sync_time import sweep_cases
+
+    return sweep_cases(seed=seed)
+
+
+def time_engine_sweep(cfg=None, cases=None, repeats: int = 3):
+    """Best-of-N wall-clock (suppresses machine noise; results from the
+    last run — the sweep is deterministic per seed)."""
+    cfg = cfg or PONConfig(n_onus=N_ONUS)
+    cases = cases or _fig2b_cases()
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.time()
+        results = simulate_round_sweep(cfg, cases)
+        best = min(best, time.time() - t0)
+    return best, results
+
+
+def time_reference_sweep(cfg=None, cases=None):
+    cfg = cfg or PONConfig(n_onus=N_ONUS)
+    cases = cases or _fig2b_cases()
+    t0 = time.time()
+    results = [
+        simulate_round(cfg, c.workload, c.load, c.policy, seed=c.seed,
+                       backend="reference")
+        for c in cases
+    ]
+    return time.time() - t0, results
+
+
+def engine_throughput(n_onus_grid=(128, 512, 2048), policy="fcfs",
+                      load=0.8):
+    """Rounds/sec of a single engine round at growing ONU counts."""
+    out = []
+    for n in n_onus_grid:
+        cfg = PONConfig(n_onus=n, line_rate_bps=10e9 * n / 128)
+        wl = FLRoundWorkload(clients=_clients(n, n), model_bits=M_BITS)
+        t0 = time.time()
+        r = simulate_round_sweep(
+            cfg, [SweepCase(workload=wl, load=load, policy=policy, seed=0)]
+        )[0]
+        wall = time.time() - t0
+        out.append({
+            "n_onus": n,
+            "wall_s": wall,
+            "rounds_per_sec": 1.0 / wall,
+            "sync_s": r.sync_time,
+        })
+    return out
+
+
+def measure(full: bool = False) -> dict:
+    """The BENCH_net_engine.json payload."""
+    cfg = PONConfig(n_onus=N_ONUS)
+    cases = _fig2b_cases()
+    # warm up allocators/caches so neither side pays one-time costs
+    simulate_round_sweep(cfg, cases[:1])
+    eng_wall, eng_results = time_engine_sweep(cfg, cases)
+    if full:
+        ref_wall, ref_results = time_reference_sweep(cfg, cases)
+        ref_cells = len(cases)
+        eng_speedup_base = eng_wall / len(cases)
+    else:
+        # one representative cell (the slowest: fcfs, load 0.8, full
+        # involvement) keeps the fast tier fast; the speedup compares
+        # BOTH backends on that same cell (like for like) — the
+        # checked-in JSON is produced with --full over all 16 cells
+        cell = [c for c in cases
+                if c.policy == "fcfs" and c.load == 0.8
+                and len(c.workload.clients) == N_ONUS]
+        ref_wall, ref_results = time_reference_sweep(cfg, cell)
+        ref_cells = len(cell)
+        eng_cell_wall, _ = time_engine_sweep(cfg, cell, repeats=2)
+        eng_speedup_base = eng_cell_wall / len(cell)
+    return {
+        "benchmark": "fig2b_sweep_reference_vs_vectorized",
+        "n_onus": N_ONUS,
+        "sweep_cells": len(cases),
+        "reference_cells_timed": ref_cells,
+        "reference_wall_s": ref_wall,
+        "reference_wall_per_cell_s": ref_wall / ref_cells,
+        "vectorized_wall_s": eng_wall,
+        "vectorized_wall_per_cell_s": eng_wall / len(cases),
+        "speedup_per_cell": (
+            (ref_wall / ref_cells) / eng_speedup_base
+        ),
+        "speedup_full_sweep": (
+            (ref_wall / ref_cells * len(cases))
+            / (eng_speedup_base * len(cases))
+        ),
+        "sync_times_s": {
+            f"{c.policy}_load{c.load}_n{len(c.workload.clients)}":
+            r.sync_time
+            for c, r in zip(cases, eng_results)
+        },
+        "engine_throughput": engine_throughput(),
+    }
+
+
+def run() -> list:
+    m = measure(full=False)
+    rows = [
+        {
+            "name": "net_engine_fig2b_sweep_vectorized",
+            "us_per_call": m["vectorized_wall_per_cell_s"] * 1e6,
+            "derived": (
+                f"sweep_s={m['vectorized_wall_s']:.2f} "
+                f"speedup_vs_ref={m['speedup_per_cell']:.1f}x"
+            ),
+        }
+    ]
+    for tp in m["engine_throughput"]:
+        rows.append(
+            {
+                "name": f"net_engine_round_n{tp['n_onus']}",
+                "us_per_call": tp["wall_s"] * 1e6,
+                "derived": (
+                    f"rounds_per_sec={tp['rounds_per_sec']:.2f} "
+                    f"sync_s={tp['sync_s']:.2f}"
+                ),
+            }
+        )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="time the reference on the full 16-cell sweep")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement payload as JSON")
+    args = ap.parse_args()
+    m = measure(full=args.full)
+    print(json.dumps(m, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(m, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

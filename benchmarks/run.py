@@ -1,18 +1,33 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+``--tier fast`` runs only the cheap tier (module attribute
+``TIER == "fast"``; training/roofline modules are the slow tier);
+``--json out.json`` additionally writes the rows (plus environment
+metadata) as JSON — the artifact CI uploads.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
+import time
 import traceback
 
+# make `python benchmarks/run.py` work from anywhere: the repo root (the
+# ``benchmarks`` package's parent) must be importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-def main() -> None:
+
+def collect_modules(tier: str):
     from benchmarks import (
         bs_micro,
         fig2a_accuracy,
         fig2b_sync_time,
+        net_engine,
         roofline_report,
         training_time_saving,
     )
@@ -21,21 +36,62 @@ def main() -> None:
         ("bs_micro", bs_micro),
         ("fig2b_sync_time", fig2b_sync_time),
         ("training_time_saving", training_time_saving),
+        ("net_engine", net_engine),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),
     ]
+    if tier == "all":
+        return modules
+    return [
+        (name, mod) for name, mod in modules
+        if getattr(mod, "TIER", "slow") == tier
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", choices=("fast", "slow", "all"),
+                    default="all", help="which benchmark tier to run")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + metadata as JSON")
+    args = ap.parse_args(argv)
+
+    modules = collect_modules(args.tier)
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for name, mod in modules:
+        t0 = time.time()
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{derived}",
                       flush=True)
+                rows.append({**row, "module": name})
         except Exception as e:  # pragma: no cover
             failures += 1
             traceback.print_exc()
             print(f"{name},0,ERROR: {type(e).__name__}: {e}", flush=True)
+            rows.append({"name": name, "us_per_call": 0.0, "module": name,
+                         "derived": f"ERROR: {type(e).__name__}: {e}"})
+        finally:
+            rows.append({
+                "name": f"{name}__module_wall",
+                "us_per_call": (time.time() - t0) * 1e6,
+                "derived": "module wall-clock",
+                "module": name,
+            })
+    if args.json:
+        payload = {
+            "tier": args.tier,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

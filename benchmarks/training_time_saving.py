@@ -19,11 +19,19 @@ import time
 import numpy as np
 
 from repro.core.slicing import ClientProfile
-from repro.net import FLRoundWorkload, PONConfig, simulate_round
+from repro.net import (
+    FLRoundWorkload,
+    PONConfig,
+    SweepCase,
+    simulate_round_sweep,
+)
+
+TIER = "fast"
 
 M_BITS = 26.416e6
 N_ONUS = 128
 LOAD = 0.8
+SEEDS = 2
 
 
 def _mk_clients(seed=42):
@@ -62,14 +70,14 @@ def run() -> list:
     wl = FLRoundWorkload(clients=clients, model_bits=M_BITS)
     t0 = time.time()
 
-    sim_fcfs = np.mean(
-        [simulate_round(cfg, wl, LOAD, "fcfs", seed=s).sync_time
-         for s in range(2)]
-    )
-    sim_bs = np.mean(
-        [simulate_round(cfg, wl, LOAD, "bs", seed=s).sync_time
-         for s in range(2)]
-    )
+    # both policies x all seeds as one stacked engine simulation
+    cases = [
+        SweepCase(workload=wl, load=LOAD, policy=policy, seed=s)
+        for policy in ("fcfs", "bs") for s in range(SEEDS)
+    ]
+    results = simulate_round_sweep(cfg, cases)
+    sim_fcfs = np.mean([r.sync_time for r in results[:SEEDS]])
+    sim_bs = np.mean([r.sync_time for r in results[SEEDS:]])
     an_fcfs = analytic_serialized(clients, LOAD, cfg)
     an_bs = analytic_bs(clients, cfg)
     wall = time.time() - t0

@@ -12,7 +12,9 @@ slot plan is then quantised into per-cycle grants (``map_to_polling_cycles``)
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Dict, List, Sequence
+
+import numpy as np
 
 from repro.core.slicing import ClientProfile, SliceSpec
 
@@ -69,6 +71,19 @@ def schedule_slots(
 
 def schedule_makespan(slots: Sequence[SlotAssignment]) -> float:
     return max(s.t_end for s in slots) if slots else 0.0
+
+
+def slots_to_arrays(slots: Sequence[SlotAssignment]) -> Dict[str, np.ndarray]:
+    """Slot schedule as parallel arrays, t_start-sorted (stable, matching
+    ``SlicedDBA``'s slot ordering) — the form the vectorized engine
+    consumes."""
+    order = sorted(range(len(slots)), key=lambda i: slots[i].t_start)
+    return {
+        "t_start": np.array([slots[i].t_start for i in order], np.float64),
+        "t_end": np.array([slots[i].t_end for i in order], np.float64),
+        "client_id": np.array([slots[i].client_id for i in order], np.int64),
+        "bits": np.array([slots[i].bits for i in order], np.float64),
+    }
 
 
 def map_to_polling_cycles(

@@ -12,6 +12,14 @@ from identical params, so inter-pod deltas are small and quantise far
 more accurately than raw weights). Reconstruction is exact for pod 0
 (zero delta), so the scheme degrades gracefully to plain FedAvg as the
 pods converge.
+
+Error feedback (matching the host-side ``fl.compression`` pipeline):
+each pod carries an fp32 residual of what compression dropped last
+round; the residual is added to the next round's delta before encoding,
+so compression noise averages out instead of biasing FedAvg. The
+residual pytree lives in the round state (``init_residuals`` /
+``fedavg_pods(..., residuals=...)``) and stays pod-local — it is never
+transmitted.
 """
 from __future__ import annotations
 
@@ -50,9 +58,17 @@ def pod_weighted_mean(leaf: jnp.ndarray, w_norm: jnp.ndarray) -> jnp.ndarray:
     return jnp.broadcast_to(g.astype(leaf.dtype)[None], leaf.shape)
 
 
+def init_residuals(params):
+    """Zero fp32 error-feedback residuals, one per pod-stacked leaf."""
+    return jax.tree.map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), params
+    )
+
+
 def compress_pod_updates(
-    leaf: jnp.ndarray, scheme: str, topk_frac: float = 0.05
-) -> jnp.ndarray:
+    leaf: jnp.ndarray, scheme: str, topk_frac: float = 0.05,
+    residual: Optional[jnp.ndarray] = None,
+):
     """Round-trip each pod's update through the wire compression.
 
     ``leaf`` is ``(n_pods, ...)``. Each pod's transmitted payload is its
@@ -60,28 +76,63 @@ def compress_pod_updates(
     aggregator reconstructs (``ref + decode(encode(delta))``), matching
     the decode-side view that ``repro.fl.compression.compress_delta``
     simulates on the host.
+
+    With ``residual`` (fp32, same shape as ``leaf``), the residual is
+    added to the delta before encoding and the call returns
+    ``(decoded, new_residual)`` where ``new_residual = target -
+    decode(encode(target))`` — per-pod error feedback. A ``"none"``
+    scheme transmits exactly, so the residual passes through unchanged
+    (as in the host pipeline).
     """
     scheme = check_scheme(scheme)
     if scheme == "none":
-        return leaf
+        return leaf if residual is None else (leaf, residual)
     ref = leaf[0]
-    delta = (leaf - ref[None]).astype(jnp.float32)
+    target = (leaf - ref[None]).astype(jnp.float32)
+    if residual is not None:
+        target = target + residual
+    comp = target
     if "topk" in scheme:
-        delta = jax.vmap(partial(topk_sparsify, frac=topk_frac))(delta)
+        comp = jax.vmap(partial(topk_sparsify, frac=topk_frac))(comp)
     if "int8" in scheme:
-        q, scale = jax.vmap(quantize_int8)(delta)
-        delta = jax.vmap(dequantize_int8)(q, scale)
-    return (ref.astype(jnp.float32)[None] + delta).astype(leaf.dtype)
+        q, scale = jax.vmap(quantize_int8)(comp)
+        comp = jax.vmap(dequantize_int8)(q, scale)
+    decoded = (ref.astype(jnp.float32)[None] + comp).astype(leaf.dtype)
+    if residual is None:
+        return decoded
+    return decoded, target - comp
 
 
 def fedavg_pods(params, weights: jnp.ndarray, scheme: str = "none",
-                topk_frac: float = 0.05):
-    """Compressed weighted FedAvg over the pod axis of a param pytree."""
+                topk_frac: float = 0.05, residuals=None):
+    """Compressed weighted FedAvg over the pod axis of a param pytree.
+
+    With ``residuals`` (a pytree from ``init_residuals``), applies
+    error-feedback compression and returns ``(avg_params,
+    new_residuals)``; without, returns ``avg_params`` (unchanged
+    behaviour).
+    """
     w = weights.astype(jnp.float32)
     w_norm = w / jnp.sum(w)
 
-    def avg(leaf):
-        decoded = compress_pod_updates(leaf, scheme, topk_frac)
-        return pod_weighted_mean(decoded, w_norm)
+    if residuals is None:
+        def avg(leaf):
+            decoded = compress_pod_updates(leaf, scheme, topk_frac)
+            return pod_weighted_mean(decoded, w_norm)
 
-    return jax.tree.map(avg, params)
+        return jax.tree.map(avg, params)
+
+    def avg_ef(leaf, res):
+        decoded, new_res = compress_pod_updates(
+            leaf, scheme, topk_frac, residual=res
+        )
+        return pod_weighted_mean(decoded, w_norm), new_res
+
+    pairs = jax.tree.map(avg_ef, params, residuals)
+    avg_params = jax.tree.map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_residuals = jax.tree.map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return avg_params, new_residuals

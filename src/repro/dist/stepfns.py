@@ -69,6 +69,7 @@ def make_train_step(
     cfg: ModelConfig,
     opt_cfg: OptimizerConfig,
     schedule: Optional[Callable] = None,
+    grad_shardings: Optional[Any] = None,
 ) -> Callable:
     """Single-pod SGD step with microbatch grad accumulation.
 
@@ -76,8 +77,21 @@ def make_train_step(
     ``(B, ...)``; with ``cfg.grad_accum > 1`` the batch is split into
     ``grad_accum`` microbatches scanned sequentially (grads averaged in
     fp32), so the global batch fits regardless of per-device memory.
+
+    ``grad_shardings`` (a pytree of ``NamedSharding`` matching the param
+    tree) pins the accumulated fp32 gradients — and the averaged grads
+    fed to the optimizer — to the parameters' layout via
+    ``jax.lax.with_sharding_constraint``. Without it, GSPMD is free to
+    keep the scan carry in a different layout than the ZeRO-sharded
+    optimizer update consumes, which shows up as involuntary resharding
+    (reported by XLA between the grad-accum scan and the update).
     """
     accum = max(int(cfg.grad_accum), 1)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
 
     def loss_of(params, batch):
         return lm.loss_fn(params, cfg, batch)
@@ -97,14 +111,15 @@ def make_train_step(
                 g_sum = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), g_sum, g
                 )
-                return (g_sum, l_sum + loss), None
+                return (constrain(g_sum), l_sum + loss), None
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params
             )
             (g_sum, l_sum), _ = jax.lax.scan(
-                body, (zeros, jnp.zeros((), jnp.float32)), micro
+                body, (constrain(zeros), jnp.zeros((), jnp.float32)), micro
             )
+            g_sum = constrain(g_sum)
             grads = jax.tree.map(
                 lambda g, p: (g / accum).astype(p.dtype),
                 g_sum, state.params,
@@ -112,6 +127,7 @@ def make_train_step(
             loss = l_sum / accum
         else:
             loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+        grads = constrain(grads)
 
         lr = jnp.asarray(
             schedule(state.opt.step) if schedule is not None else opt_cfg.lr,
@@ -130,6 +146,8 @@ def make_fed_train_step(
     cfg: ModelConfig,
     opt_cfg: OptimizerConfig,
     schedule: Optional[Callable] = None,
+    grad_shardings: Optional[Any] = None,
+    spmd_axis_name: Optional[str] = None,
 ) -> Callable:
     """Per-pod local step over the federated (pod-stacked) state.
 
@@ -137,11 +155,16 @@ def make_fed_train_step(
     step is vmapped over the pod axis, so under the ``("pod", "data",
     "model")`` mesh each pod trains on its own shard with zero cross-pod
     communication — exactly the paper's local-epoch phase.
+
+    ``grad_shardings`` are *per-pod* (pod axis stripped) shardings for
+    the accumulated gradients; pass ``spmd_axis_name="pod"`` so vmap
+    prepends the pod mesh axis to every constraint inside the step.
     """
-    base = make_train_step(cfg, opt_cfg, schedule)
+    base = make_train_step(cfg, opt_cfg, schedule,
+                           grad_shardings=grad_shardings)
 
     def step(state: TrainState, batch):
-        return jax.vmap(base)(state, batch)
+        return jax.vmap(base, spmd_axis_name=spmd_axis_name)(state, batch)
 
     return step
 
@@ -152,7 +175,8 @@ def make_fed_train_step(
 
 
 def make_fed_round_step(cfg: ModelConfig, compress: Optional[str] = None,
-                        topk_frac: float = 0.05) -> Callable:
+                        topk_frac: float = 0.05,
+                        error_feedback: bool = False) -> Callable:
     """Weighted FedAvg across the pod axis (``repro.fl.aggregation``
     semantics, expressed as one cross-pod reduce).
 
@@ -163,11 +187,28 @@ def make_fed_round_step(cfg: ModelConfig, compress: Optional[str] = None,
     Optimizer moments stay pod-local (local adaptive state), mirroring
     the host-side CPS which only ships model weights.
 
+    With ``error_feedback=True`` the signature becomes
+    ``round_step(state, weights, residuals) -> (state, residuals)``:
+    each pod carries the fp32 residual of what compression dropped and
+    adds it to its next upload (``init_round_residuals`` builds the
+    initial zeros) — the in-graph mirror of the host-side
+    ``fl.compression`` error-feedback pipeline.
+
     The wire size of the upload this step implies is
     ``fed_update_bits(cfg, compress)`` — the co-sim's slice sizing
     derives from that, not from a hard-coded constant.
     """
     scheme = fedops.check_scheme(compress)
+
+    if error_feedback:
+        def round_step_ef(state: TrainState, weights, residuals):
+            params, new_res = fedops.fedavg_pods(
+                state.params, weights, scheme=scheme,
+                topk_frac=topk_frac, residuals=residuals,
+            )
+            return TrainState(params=params, opt=state.opt), new_res
+
+        return round_step_ef
 
     def round_step(state: TrainState, weights) -> TrainState:
         params = fedops.fedavg_pods(
@@ -176,6 +217,12 @@ def make_fed_round_step(cfg: ModelConfig, compress: Optional[str] = None,
         return TrainState(params=params, opt=state.opt)
 
     return round_step
+
+
+def init_round_residuals(state: TrainState):
+    """Zero error-feedback residuals for ``make_fed_round_step(...,
+    error_feedback=True)`` — pod-stacked fp32, like the params."""
+    return fedops.init_residuals(state.params)
 
 
 def fed_update_bits(cfg: ModelConfig, compress: Optional[str] = "int8",

@@ -15,7 +15,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.slicing import ClientProfile
-from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult, simulate_round
+from repro.net.engine import SweepCase, simulate_round_sweep
+from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
 from repro.fl.server import CPSServer
 
 
@@ -84,14 +85,18 @@ class FLNetworkCoSim:
             wl = FLRoundWorkload(
                 clients=clients, model_bits=self.cfg.model_bits
             )
-            syncs = [
-                simulate_round(
-                    self.cfg.pon, wl, self.cfg.total_load,
-                    self.cfg.policy, seed=s,
-                ).sync_time
-                for s in range(self.cfg.timing_seeds)
-            ]
-            self._timing_cache[key] = float(np.mean(syncs))
+            # all timing seeds run as one stacked engine simulation
+            results = simulate_round_sweep(
+                self.cfg.pon,
+                [
+                    SweepCase(workload=wl, load=self.cfg.total_load,
+                              policy=self.cfg.policy, seed=s)
+                    for s in range(self.cfg.timing_seeds)
+                ],
+            )
+            self._timing_cache[key] = float(
+                np.mean([r.sync_time for r in results])
+            )
         return self._timing_cache[key]
 
     def run(

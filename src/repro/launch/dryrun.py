@@ -105,12 +105,31 @@ def run_cell(
                 donate_argnums=0,
             ).lower(state, weights)
         elif shape.kind == "train":
-            step = stepfns.make_train_step(cfg, opt_cfg)
-            if fed:
-                step = stepfns.make_fed_train_step(cfg, opt_cfg)
             state, state_shardings = specs_mod.state_specs(
                 cfg, opt_cfg, mesh, fed=fed, n_pods=n_pods
             )
+            # pin the grad-accum carry to the params' layout so the
+            # scan -> ZeRO-update boundary needs no involuntary reshard
+            if fed:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                inner = specs_mod.state_spec_tree(
+                    specs_mod.state_shapes(cfg, opt_cfg, 0), cfg, mesh,
+                    fed=False,
+                )
+                grad_sh = jax.tree.map(
+                    lambda p: NamedSharding(mesh, p), inner.params,
+                    is_leaf=lambda x: isinstance(x, PartitionSpec),
+                )
+                step = stepfns.make_fed_train_step(
+                    cfg, opt_cfg, grad_shardings=grad_sh,
+                    spmd_axis_name="pod",
+                )
+            else:
+                step = stepfns.make_train_step(
+                    cfg, opt_cfg,
+                    grad_shardings=state_shardings.params,
+                )
             batch = specs_mod.train_batch_specs(
                 cfg, shape, mesh, fed=fed, n_pods=n_pods
             )

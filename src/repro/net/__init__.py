@@ -1,4 +1,8 @@
 """PON network substrate: traffic, DBA engines, round simulator."""
+from repro.net.engine import (  # noqa: F401
+    SweepCase,
+    simulate_round_sweep,
+)
 from repro.net.dba import (  # noqa: F401
     DEFAULT_EFFICIENCY,
     FCFSBestEffort,
@@ -15,6 +19,7 @@ from repro.net.sim import (  # noqa: F401
 from repro.net.traffic import (  # noqa: F401
     PACKET_BITS,
     PoissonSource,
+    PrecomputedSource,
     background_rate_for_load,
     per_onu_sources,
 )

@@ -66,14 +66,20 @@ class OnuQueue:
 
     def serve(self, bits: float, kind: Optional[str] = None) -> Dict[str, float]:
         """Drain up to ``bits`` from the FIFO head (optionally only ``kind``
-        segments, preserving order among them). Returns drained bits by kind."""
+        segments, preserving order among them). Returns drained bits by kind.
+
+        Single-pass: survivors are rebuilt into a fresh list instead of
+        ``pop(i)``-compacting in place, so a serve over n segments is O(n)
+        rather than O(n^2)."""
         served: Dict[str, float] = {}
         remaining = bits
-        i = 0
-        while remaining > 1e-9 and i < len(self.segments):
-            seg = self.segments[i]
+        kept: List[list] = []
+        for j, seg in enumerate(self.segments):
+            if remaining <= 1e-9:
+                kept.extend(self.segments[j:])
+                break
             if kind is not None and seg[0] != kind:
-                i += 1
+                kept.append(seg)
                 continue
             take = min(seg[1], remaining)
             seg[1] -= take
@@ -81,10 +87,10 @@ class OnuQueue:
             served[seg[0]] = served.get(seg[0], 0.0) + take
             if seg[1] <= 1.0:            # < 1 bit: numerically drained
                 remaining = max(0.0, remaining - seg[1])
-                self.segments.pop(i)
             else:
-                i += 1
-        self.hol_time = self.segments[0][2] if self.segments else np.inf
+                kept.append(seg)
+        self.segments = kept
+        self.hol_time = kept[0][2] if kept else np.inf
         return served
 
 

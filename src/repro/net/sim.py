@@ -118,6 +118,7 @@ def _downstream_phase(
     rng: np.random.Generator,
     reserved: bool,
     max_t: float = 600.0,
+    sources=None,
 ) -> Dict[int, float]:
     """Model distribution; returns per-client download-done time."""
     clients = workload.clients
@@ -133,7 +134,8 @@ def _downstream_phase(
     qmap = {q.onu_id: q for q in queues}
     for c in clients:   # per-EC-node unicast copies enqueue at round start
         qmap[c.client_id % cfg.n_onus].push("fl", workload.model_bits, 0.0)
-    sources = _mk_sources(cfg, bg_rate_bps, rng)
+    if sources is None:
+        sources = _mk_sources(cfg, bg_rate_bps, rng)
     dba = FCFSBestEffort(
         cfg.line_rate_bps, cfg.cycle_time_s, cfg.n_onus, cfg.efficiency
     )
@@ -165,12 +167,14 @@ def _upstream_phase(
     slice_spec: Optional[SliceSpec] = None,
     slots=None,
     max_t: float = 600.0,
+    sources=None,
 ) -> Dict[int, float]:
     """Upload phase; returns per-client upload-done time."""
     clients = workload.clients
     queues = [OnuQueue(i) for i in range(cfg.n_onus)]
     qmap = {q.onu_id: q for q in queues}
-    sources = _mk_sources(cfg, bg_rate_bps, rng)
+    if sources is None:
+        sources = _mk_sources(cfg, bg_rate_bps, rng)
     if dba_mode == "bs":
         dba = SlicedDBA(
             cfg.line_rate_bps,
@@ -191,6 +195,11 @@ def _upstream_phase(
     t = 0.0
     while remaining and t < max_t:
         for cid, t_ready in list(pending.items()):
+            if cid not in remaining:
+                # finished before ever enqueuing: a same-ONU grant was
+                # attributed to this client by the settle order
+                del pending[cid]
+                continue
             if t_ready <= t + cfg.cycle_time_s:
                 qmap[cid % cfg.n_onus].push("fl", remaining[cid], max(t_ready, t))
                 del pending[cid]
@@ -218,8 +227,34 @@ def simulate_round(
     policy: str,
     seed: int = 0,
     t_round_hint: float = 10.0,
+    backend: str = "vectorized",
+    _dl_sources=None,
+    _ul_sources=None,
 ) -> RoundResult:
-    """Simulate one synchronisation round under ``policy`` in {fcfs, bs}."""
+    """Simulate one synchronisation round under ``policy`` in {fcfs, bs}.
+
+    ``backend="vectorized"`` (default) runs the round on the batched
+    array engine (``repro.net.engine``); ``backend="reference"`` keeps
+    the original cycle-by-cycle simulator. Both implement the same
+    semantics (property-tested against each other); their background
+    arrival random streams differ, so per-seed results are backend-
+    specific. ``_dl_sources``/``_ul_sources`` inject per-ONU arrival
+    sources into the reference phases (parity-test hook; forces the
+    reference backend).
+    """
+    if backend not in ("vectorized", "reference"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if (backend == "vectorized" and _dl_sources is None
+            and _ul_sources is None):
+        from repro.net.engine import SweepCase, simulate_round_sweep
+
+        return simulate_round_sweep(
+            cfg,
+            [SweepCase(workload=workload, load=total_load, policy=policy,
+                       seed=seed)],
+            t_round_hint=t_round_hint,
+        )[0]
+
     rng = np.random.default_rng(seed)
     clients = workload.clients
     n = len(clients)
@@ -233,7 +268,8 @@ def simulate_round(
     )
 
     dl_done = _downstream_phase(
-        cfg, workload, bg_rate, rng, reserved=(policy == "bs")
+        cfg, workload, bg_rate, rng, reserved=(policy == "bs"),
+        sources=_dl_sources,
     )
     ready = {c.client_id: dl_done[c.client_id] + c.t_ud for c in clients}
     spec = slots = None
@@ -256,10 +292,14 @@ def simulate_round(
         )
         slots = schedule_slots(profiles, spec, round_start=0.0)
         ul_done = _upstream_phase(
-            cfg, workload, ready, bg_rate, rng, "bs", spec, slots
+            cfg, workload, ready, bg_rate, rng, "bs", spec, slots,
+            sources=_ul_sources,
         )
     else:
-        ul_done = _upstream_phase(cfg, workload, ready, bg_rate, rng, "fcfs")
+        ul_done = _upstream_phase(
+            cfg, workload, ready, bg_rate, rng, "fcfs",
+            sources=_ul_sources,
+        )
 
     sync = max(ul_done.values()) + workload.t_aggregate
     compute_bound = max(ready.values())

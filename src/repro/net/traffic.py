@@ -34,6 +34,27 @@ class PoissonSource:
         return float(lengths.sum()) * self.packet_bits
 
 
+@dataclass
+class PrecomputedSource:
+    """Replays a fixed per-cycle arrival sequence for one ONU.
+
+    Drop-in for ``PoissonSource`` in the reference simulator's phases;
+    cycles beyond the sequence see zero arrivals. Used by the parity
+    tests to feed the reference simulator and the vectorized engine the
+    identical background arrival process.
+    """
+
+    rows: "object"                  # 1-D sequence of bits per cycle
+    cursor: int = 0
+
+    def arrivals(self, dt_s: float) -> float:
+        i = self.cursor
+        self.cursor += 1
+        if i >= len(self.rows):
+            return 0.0
+        return float(self.rows[i])
+
+
 def per_onu_sources(
     total_rate_bps: float,
     n_onus: int,
