@@ -29,6 +29,7 @@ def collect_modules(tier: str):
         fig2b_sync_time,
         net_engine,
         roofline_report,
+        timeline,
         training_time_saving,
     )
 
@@ -37,6 +38,7 @@ def collect_modules(tier: str):
         ("fig2b_sync_time", fig2b_sync_time),
         ("training_time_saving", training_time_saving),
         ("net_engine", net_engine),
+        ("timeline", timeline),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),
     ]

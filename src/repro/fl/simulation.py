@@ -2,10 +2,20 @@
 
 Couples the ``CPSServer`` (actual federated SGD on the LEAF-style CNN) with
 the PON round simulator. Learning dynamics (accuracy vs round — Fig 2a) come
-from real training; wall-clock training time (Fig 2b, the 36% saving) comes
-from rounds × simulated synchronisation time. Since the paper's BS slice is
-recomputed only on membership change, the per-round timing for a fixed
-client set is cached and reused across rounds.
+from real training; wall-clock training time (Fig 2b/3, the 36% saving)
+comes from rounds × simulated synchronisation time.
+
+Network timing backends (``FLNetworkCoSim.run``):
+
+* ``"timeline"`` (default) — the whole training timeline advances as ONE
+  stacked simulation on ``repro.net.timeline``: per-round client sets
+  become membership masks over the union workload, per-round (possibly
+  compression-dependent) upload sizes become the schedule's ``m_ud_bits``,
+  and every round × timing-seed runs concurrently on the engine's batch
+  axis with counter-keyed arrival streams.
+* ``"per_round"`` — the PR 2 loop: one engine call per round, with the
+  paper's observation that a fixed client set reuses its timing (the BS
+  slice is recomputed only on membership change) expressed as a cache.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import numpy as np
 from repro.core.slicing import ClientProfile
 from repro.net.engine import SweepCase, simulate_round_sweep
 from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
+from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
 from repro.fl.server import CPSServer
 
 
@@ -73,6 +84,7 @@ class FLNetworkCoSim:
         self.server = server
         self.cfg = cfg
         self._timing_cache: Dict[Tuple, float] = {}
+        self._update_bits_from_compression = False
 
     def _round_sync_time(self, clients: List[ClientProfile]) -> float:
         key = (
@@ -99,37 +111,93 @@ class FLNetworkCoSim:
             )
         return self._timing_cache[key]
 
+    def _round_profiles(self, log) -> Tuple[List[ClientProfile], float]:
+        m_bits = (
+            self.cfg.upload_bits
+            if self.cfg.upload_bits is not None
+            else self.cfg.model_bits
+        )
+        if self._update_bits_from_compression and log.n_arrived:
+            m_bits = log.update_bits / max(log.n_arrived, 1)
+        profiles = [
+            ClientProfile(
+                client_id=c.client_id,
+                t_ud=c.t_ud_s,
+                t_dl=0.0,
+                m_ud_bits=m_bits,
+                distance_m=c.distance_m,
+            )
+            for c in self.server.clients
+        ]
+        return profiles, float(m_bits)
+
+    def _timeline_sync_times(
+        self, per_round: List[List[ClientProfile]],
+        m_bits: List[float],
+    ) -> np.ndarray:
+        """Per-round sync times, averaged over timing seeds, from ONE
+        stacked multi-round simulation: the union of all rounds' clients
+        forms the workload, per-round participation the membership
+        mask, per-round upload sizes the schedule's ``m_ud_bits``."""
+        R = len(per_round)
+        union: Dict[int, ClientProfile] = {}
+        for profs in per_round:
+            for p in profs:
+                union.setdefault(p.client_id, p)
+        ids = sorted(union)
+        pos = {cid: j for j, cid in enumerate(ids)}
+        membership = np.zeros((R, len(ids)), bool)
+        for r, profs in enumerate(per_round):
+            for p in profs:
+                membership[r, pos[p.client_id]] = True
+        wl = FLRoundWorkload(
+            clients=[union[c] for c in ids],
+            model_bits=self.cfg.model_bits,
+        )
+        schedule = TimelineSchedule(
+            n_rounds=R, membership=membership,
+            m_ud_bits=np.asarray(m_bits),
+        )
+        results = simulate_timeline_sweep(
+            self.cfg.pon,
+            [SweepCase(workload=wl, load=self.cfg.total_load,
+                       policy=self.cfg.policy, seed=s)
+             for s in range(self.cfg.timing_seeds)],
+            schedule,
+        )
+        return np.mean([r.sync_times for r in results], axis=0)
+
     def run(
         self,
         n_rounds: int,
         eval_fn: Optional[Callable] = None,
         update_bits_from_compression: bool = False,
+        backend: str = "timeline",
     ) -> CoSimResult:
+        """Train ``n_rounds`` rounds and attach simulated network timing.
+
+        ``backend="timeline"`` (default) resolves all rounds' timings in
+        one stacked multi-round simulation after training;
+        ``backend="per_round"`` keeps the PR 2 loop (one engine call per
+        round, cached by client set) as the reference.
+        """
+        if backend not in ("timeline", "per_round"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self._update_bits_from_compression = update_bits_from_compression
         rounds = []
-        total_time = 0.0
+        per_round_profiles: List[List[ClientProfile]] = []
+        per_round_bits: List[float] = []
         sync = 0.0
+        total_time = 0.0
         for _ in range(n_rounds):
             log = self.server.run_round(eval_fn=eval_fn)
-            m_bits = (
-                self.cfg.upload_bits
-                if self.cfg.upload_bits is not None
-                else self.cfg.model_bits
-            )
-            if update_bits_from_compression and log.n_arrived:
-                m_bits = log.update_bits / max(log.n_arrived, 1)
-            profiles = [
-                ClientProfile(
-                    client_id=c.client_id,
-                    t_ud=c.t_ud_s,
-                    t_dl=0.0,
-                    m_ud_bits=m_bits,
-                    distance_m=c.distance_m,
-                )
-                for c in self.server.clients
-            ]
-            sync = self._round_sync_time(profiles)
-            log.sync_time_s = sync
-            total_time += sync
+            profiles, m_bits = self._round_profiles(log)
+            per_round_profiles.append(profiles)
+            per_round_bits.append(m_bits)
+            if backend == "per_round":
+                sync = self._round_sync_time(profiles)
+                log.sync_time_s = sync
+                total_time += sync
             rounds.append(
                 {
                     "round": log.round_index,
@@ -139,6 +207,16 @@ class FLNetworkCoSim:
                     "n_arrived": log.n_arrived,
                 }
             )
+        if backend == "timeline" and rounds:
+            sync_times = self._timeline_sync_times(
+                per_round_profiles, per_round_bits
+            )
+            for entry, log, s in zip(rounds, self.server.history[-len(
+                    rounds):], sync_times):
+                entry["sync_time_s"] = float(s)
+                log.sync_time_s = float(s)
+            total_time = float(sync_times.sum())
+            sync = float(sync_times[-1])
         return CoSimResult(
             rounds=rounds,
             total_time_s=total_time,

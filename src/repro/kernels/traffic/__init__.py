@@ -1,0 +1,23 @@
+"""Counter-based Poisson-burst traffic sampler (threefry-2x32).
+
+Replaces the engine's sequential numpy Poisson/negative-binomial draws:
+every (case, onu, cycle) cell of the background arrival process is a
+pure function of a 64-bit stream key and the (cycle, onu) counter, so
+
+* the stream is O(1)-seekable — any cycle window can be materialised
+  without generating its prefix;
+* chunk boundaries cannot change the stream (the per-case numpy RNG
+  made arrivals depend on chunk sizes);
+* the whole sweep batch samples in one fused XLA/Pallas call instead of
+  one ``rng.poisson`` + ``rng.negative_binomial`` pair per case.
+
+Layout follows ``kernels/{rglru,quant,ssd}``: ``kernel.py`` is the
+Pallas TPU kernel, ``ref.py`` the pure-jnp oracle (the XLA fallback on
+non-TPU backends), ``ops.py`` the public dispatch.
+"""
+from repro.kernels.traffic.ops import (  # noqa: F401
+    make_stream_key,
+    sample_arrival_bits,
+    threefry2x32_np,
+)
+from repro.kernels.traffic.ref import threefry2x32_ref  # noqa: F401

@@ -26,7 +26,9 @@ from repro.core.slicing import ClientProfile
 from repro.data import TokenBatcher, lm_tokens
 from repro.dist import stepfns
 from repro.launch.mesh import make_host_mesh
-from repro.net.sim import FLRoundWorkload, PONConfig, simulate_round
+from repro.net.engine import SweepCase
+from repro.net.sim import FLRoundWorkload, PONConfig
+from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
 from repro.optim.optimizers import OptimizerConfig
 from repro.optim.schedules import warmup_cosine
 
@@ -107,10 +109,16 @@ def train(
             for i, t in enumerate(rng.uniform(1.0, 5.0, max(pods, 2)))
         ]
         pon = PONConfig(n_onus=max(8, pods))
-        sync = simulate_round(
-            pon, FLRoundWorkload(clients=profiles, model_bits=down_bits),
-            load, policy, seed=0,
-        ).sync_time
+        # one stacked multi-round timeline provides every round's sync
+        # time (per-round arrival streams, not one number reused R times)
+        wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
+        n_net_rounds = max(rounds - start_round, 1)
+        timeline = simulate_timeline_sweep(
+            pon,
+            [SweepCase(workload=wl, load=load, policy=policy, seed=0)],
+            TimelineSchedule(n_rounds=n_net_rounds),
+        )[0]
+        sync_times = timeline.sync_times
 
         wall_simulated = 0.0
         history = []
@@ -136,6 +144,8 @@ def train(
             if fed:
                 weights = jnp.ones((pods,), jnp.float32)
                 state = round_step(state, weights)
+            sync = float(sync_times[min(rnd - start_round,
+                                        len(sync_times) - 1)])
             wall_simulated += sync
             history.append(
                 {"round": rnd, "loss": float(np.mean(losses)),

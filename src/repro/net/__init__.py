@@ -1,7 +1,15 @@
-"""PON network substrate: traffic, DBA engines, round simulator."""
+"""PON network substrate: traffic, DBA engines, round + timeline sims."""
 from repro.net.engine import (  # noqa: F401
     SweepCase,
     simulate_round_sweep,
+)
+from repro.net.timeline import (  # noqa: F401
+    TimelineResult,
+    TimelineRound,
+    TimelineSchedule,
+    simulate_timeline_per_round,
+    simulate_timeline_reference,
+    simulate_timeline_sweep,
 )
 from repro.net.dba import (  # noqa: F401
     DEFAULT_EFFICIENCY,
@@ -18,8 +26,11 @@ from repro.net.sim import (  # noqa: F401
 )
 from repro.net.traffic import (  # noqa: F401
     PACKET_BITS,
+    CounterSource,
+    CounterStream,
     PoissonSource,
     PrecomputedSource,
     background_rate_for_load,
+    burst_lambda,
     per_onu_sources,
 )

@@ -36,6 +36,16 @@ from repro.core.scheduler import SlotAssignment
 DEFAULT_EFFICIENCY = 0.92
 
 
+def _kind_matches(seg_kind, kind) -> bool:
+    """Class match: a segment kind is either a plain class string
+    ("bg"/"fl") or an owner-tagged tuple ``(class, owner_id)`` — the FL
+    phases tag each client's traffic so served bits are attributed to
+    the client whose update they carry."""
+    return seg_kind == kind or (
+        isinstance(seg_kind, tuple) and seg_kind[0] == kind
+    )
+
+
 @dataclass
 class OnuQueue:
     """Per-ONU queue: FIFO of [kind, bits, t_arrive] segments."""
@@ -44,7 +54,7 @@ class OnuQueue:
     segments: List[list] = field(default_factory=list)
     hol_time: float = np.inf         # arrival time of head-of-line backlog
 
-    def push(self, kind: str, bits: float, t: float):
+    def push(self, kind, bits: float, t: float):
         if bits <= 0:
             return
         if not self.segments:
@@ -55,30 +65,31 @@ class OnuQueue:
     def backlog(self) -> float:
         return sum(s[1] for s in self.segments)
 
-    def backlog_of(self, kind: str) -> float:
-        return sum(s[1] for s in self.segments if s[0] == kind)
+    def backlog_of(self, kind) -> float:
+        return sum(s[1] for s in self.segments if _kind_matches(s[0], kind))
 
-    def hol_time_of(self, kind: str) -> float:
+    def hol_time_of(self, kind) -> float:
         for s in self.segments:
-            if s[0] == kind:
+            if _kind_matches(s[0], kind):
                 return s[2]
         return np.inf
 
-    def serve(self, bits: float, kind: Optional[str] = None) -> Dict[str, float]:
+    def serve(self, bits: float, kind=None) -> Dict[object, float]:
         """Drain up to ``bits`` from the FIFO head (optionally only ``kind``
-        segments, preserving order among them). Returns drained bits by kind.
+        class segments, preserving order among them). Returns drained bits
+        by exact segment kind (owner tags preserved).
 
         Single-pass: survivors are rebuilt into a fresh list instead of
         ``pop(i)``-compacting in place, so a serve over n segments is O(n)
         rather than O(n^2)."""
-        served: Dict[str, float] = {}
+        served: Dict[object, float] = {}
         remaining = bits
         kept: List[list] = []
         for j, seg in enumerate(self.segments):
             if remaining <= 1e-9:
                 kept.extend(self.segments[j:])
                 break
-            if kind is not None and seg[0] != kind:
+            if kind is not None and not _kind_matches(seg[0], kind):
                 kept.append(seg)
                 continue
             take = min(seg[1], remaining)

@@ -36,7 +36,11 @@ import numpy as np
 
 from repro.core.scheduler import schedule_slots, slots_to_arrays
 from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
-from repro.net.traffic import PACKET_BITS, background_rate_for_load
+from repro.net.traffic import (
+    PACKET_BITS,
+    background_rate_for_load,
+    burst_lambda,
+)
 
 CAP_EPS = 1e-9       # the DBAs' "capacity exhausted" threshold
 SEG_EPS = 1.0        # OnuQueue.serve: segments under 1 bit are compacted
@@ -51,8 +55,15 @@ class SweepCase:
     ``dl_arrivals``/``ul_arrivals`` optionally inject a precomputed
     per-cycle background arrival matrix ``(n_cycles, n_onus)`` (bits) for
     each phase — the parity-test hook; cycles beyond the matrix see zero
-    arrivals.  When absent, arrivals are drawn from the case's own
-    seeded Poisson-burst stream.
+    arrivals.  When absent, arrivals come from the case's counter-based
+    Poisson-burst stream keyed by ``(seed, phase, stream_round)``
+    (``repro.kernels.traffic``) — identical regardless of chunking and
+    O(1)-seekable, so a multi-round timeline can address round
+    ``stream_round``'s arrivals directly.
+
+    ``no_dl_ids`` lists clients that skip the model download (their
+    ``dl_done`` is 0.0): the multi-round timeline's deadline carriers,
+    which resume a partial upload instead of fetching a fresh model.
     """
 
     workload: "FLRoundWorkload"  # noqa: F821  (imported lazily, no cycle)
@@ -61,6 +72,8 @@ class SweepCase:
     seed: int = 0
     dl_arrivals: Optional[np.ndarray] = None
     ul_arrivals: Optional[np.ndarray] = None
+    stream_round: int = 0
+    no_dl_ids: frozenset = frozenset()
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +111,11 @@ class _Layout:
             np.append(self.seg_starts, self.n_clients)
         )
         self.single = bool(self.seg_len.max() == 1)
+        # one client per ONU in ONU order: per-ONU aggregates are the
+        # client arrays themselves (no scatter, no allocation)
+        self.identity = self.single and self.n_clients == n_onus and bool(
+            (self.onu == np.arange(n_onus)).all()
+        )
 
         B = len(cases)
         nU = self.n_clients
@@ -136,38 +154,7 @@ class _Layout:
 # ---------------------------------------------------------------------------
 
 _CHUNK = 1024
-
-
-class _CasePoisson:
-    """Vectorized equivalent of per-ONU ``PoissonSource`` draws.
-
-    Burst counts are Poisson; a burst of ``k`` geometric(1/burst) packet
-    lengths totals ``k + NB(k, 1/burst)`` packets, so whole chunks of
-    cycles are drawn in two vectorized calls.
-    """
-
-    def __init__(self, rng, per_onu_rate_bps: float, cycle_s: float,
-                 n_onus: int, packet_bits: float = PACKET_BITS,
-                 burst_packets: float = 16.0):
-        self.rng = rng
-        self.n = n_onus
-        self.packet_bits = packet_bits
-        self.p = 1.0 / burst_packets
-        mean_burst_bits = packet_bits * burst_packets
-        self.lam = (
-            per_onu_rate_bps / mean_burst_bits * cycle_s
-            if per_onu_rate_bps > 0 else 0.0
-        )
-
-    def chunk(self, length: int) -> np.ndarray:
-        if self.lam <= 0:
-            return np.zeros((length, self.n))
-        counts = self.rng.poisson(self.lam, (length, self.n))
-        packets = counts.astype(np.float64)
-        nz = counts > 0
-        if np.any(nz):
-            packets[nz] += self.rng.negative_binomial(counts[nz], self.p)
-        return packets * self.packet_bits
+_CHUNK_TARGET_CELLS = 1 << 22     # bound per-chunk sampler memory
 
 
 class _CaseFixed:
@@ -179,30 +166,59 @@ class _CaseFixed:
             raise ValueError(f"arrivals must be (n_cycles, {n_onus})")
         self.rows = rows
         self.n = n_onus
-        self._k = 0
 
-    def chunk(self, length: int) -> np.ndarray:
+    def chunk(self, cycle0: int, length: int) -> np.ndarray:
         out = np.zeros((length, self.n))
-        avail = self.rows[self._k:self._k + length]
+        avail = self.rows[cycle0:cycle0 + length]
         out[: len(avail)] = avail
-        self._k += length
         return out
 
 
 class _Stream:
-    """Stacks per-case providers into ``(B, n_onus)`` rows, chunked."""
+    """Batched counter-based arrival rows, chunked and O(1)-seekable.
 
-    def __init__(self, providers: List):
-        self.providers = providers
+    Sampled cases (``(key, lam)`` pairs) are drawn in ONE vectorized
+    sampler call per chunk; injected cases replay their fixed matrices.
+    Chunk boundaries never affect values (counter-based sampler), so the
+    adaptive chunk length is purely a memory/speed knob.
+    """
+
+    def __init__(self, entries: List, n_onus: int, inv_burst: float,
+                 packet_bits: float = PACKET_BITS):
+        self.n = n_onus
+        self.inv_burst = inv_burst
+        self.packet_bits = packet_bits
+        self.fixed = [(i, e) for i, e in enumerate(entries)
+                      if isinstance(e, _CaseFixed)]
+        self.sampled = [(i, e) for i, e in enumerate(entries)
+                        if not isinstance(e, _CaseFixed)]
+        self.B = len(entries)
+        if self.sampled:
+            self.keys = np.stack([np.asarray(e[0], np.uint32)
+                                  for _, e in self.sampled])
+            self.lams = np.array([e[1] for _, e in self.sampled],
+                                 np.float32)
+            self.rows_sel = np.array([i for i, _ in self.sampled])
+        self.chunk_len = int(np.clip(
+            _CHUNK_TARGET_CELLS // max(self.B * n_onus, 1), 64, _CHUNK
+        ))
         self._buf: Optional[np.ndarray] = None
         self._base = 0
 
     def row(self, k: int) -> np.ndarray:
         if self._buf is None or k >= self._base + self._buf.shape[1]:
+            from repro.kernels.traffic.ops import sample_arrival_bits
+
             self._base = k
-            self._buf = np.stack(
-                [p.chunk(_CHUNK) for p in self.providers], axis=0
-            )
+            buf = np.zeros((self.B, self.chunk_len, self.n))
+            if self.sampled and float(self.lams.max()) > 0.0:
+                buf[self.rows_sel] = sample_arrival_bits(
+                    self.keys, k, self.chunk_len, self.n, self.lams,
+                    self.inv_burst, self.packet_bits,
+                )
+            for i, e in self.fixed:
+                buf[i] = e.chunk(k, self.chunk_len)
+            self._buf = buf
         return self._buf[:, k - self._base, :]
 
 
@@ -212,104 +228,157 @@ class _Stream:
 
 
 class _BgQueues:
-    """Batched per-ONU background FIFOs.
+    """Batched per-ONU background FIFOs on a chunked prefix-sum history.
 
-    One segment per (cycle, ONU) arrival; the head pointer + drained
-    offset reproduce ``OnuQueue.serve``'s sequential drain including the
-    1-bit compaction charge, so head-of-line ages (hence FCFS ordering)
-    match the reference exactly.
+    One segment per (cycle, ONU) arrival, stored as the *cumulative*
+    arrival bits per queue (``prefix[b, j, n]`` = bits pushed through
+    cycle ``j``). A queue's state is then just its total drained offset
+    ``D``: backlog is ``cum - D``, the head-of-line segment is the first
+    cycle whose prefix exceeds ``D``, and ``OnuQueue.serve``'s
+    sequential drain collapses to one closed-form advance —
+    ``D' = D + grant``, plus the reference's ≤1-bit compaction charge,
+    which can only trigger at the final partial segment (a genuine
+    sub-bit residue requires the budget to die inside that segment), so
+    a single snap reproduces the walk exactly.
     """
 
     def __init__(self, B: int, n_onus: int):
         self.B, self.N = B, n_onus
-        self.ptr = np.zeros((B, n_onus), np.int64)
-        self.hd = np.zeros((B, n_onus))
+        self.ptr = np.zeros((B, n_onus), np.int64)   # head segment cycle
+        self.drained = np.zeros((B, n_onus))         # incl. snap charges
+        self.cum = np.zeros((B, n_onus))             # pushed through k
         self.backlog = np.zeros((B, n_onus))
         self._chunks: Dict[int, np.ndarray] = {}
-        self._bidx = np.arange(B)[:, None]
 
     def push(self, k: int, bits: np.ndarray):
         cidx, off = divmod(k, _CHUNK)
         buf = self._chunks.get(cidx)
         if buf is None:
-            buf = self._chunks[cidx] = np.zeros((self.B, _CHUNK, self.N))
-        buf[:, off, :] = bits
+            buf = self._chunks[cidx] = np.empty((self.B, _CHUNK, self.N))
         fresh = (self.backlog <= 0.0) & (bits > 0.0)
-        np.add(self.backlog, bits, out=self.backlog)
-        if np.any(fresh):
-            self.ptr = np.where(fresh, k, self.ptr)
-            self.hd = np.where(fresh, 0.0, self.hd)
+        np.add(self.cum, bits, out=self.cum)
+        buf[:, off, :] = self.cum
+        self.backlog = self.cum - self.drained
+        # an arrival into an empty queue is the new head; every other
+        # event keeps ptr exact (full drains set k+1, partial drains
+        # advance it), so head-of-line lookups are pure gathers
+        self.ptr = np.where(fresh, k, self.ptr)
         if k and off == 0:
             live = np.where(self.backlog > 0.0, self.ptr, k)
             floor = int(live.min()) // _CHUNK
             for c in [c for c in self._chunks if c < floor]:
                 del self._chunks[c]
 
-    def _head_bits_flat(self, rb, rn, ptr, hd, k: int) -> np.ndarray:
-        """Remaining head-segment bits for a flat queue subset."""
+    def _prefix_at(self, rb, rn, idx) -> np.ndarray:
+        """Prefix values at absolute cycle ``idx`` for a flat subset."""
         out = np.zeros(len(rb))
         for cidx, buf in self._chunks.items():
             base = cidx * _CHUNK
-            m = (ptr >= base) & (ptr < base + _CHUNK)
-            if np.any(m):
-                out[m] = buf[rb[m], ptr[m] - base, rn[m]]
-        return np.maximum(np.where(ptr <= k, out - hd, 0.0), 0.0)
+            m = (idx >= base) & (idx < base + _CHUNK)
+            if m.any():
+                out[m] = buf[rb[m], idx[m] - base, rn[m]]
+        return out
 
-    def hol(self, cycle_times: np.ndarray) -> np.ndarray:
-        safe = np.clip(self.ptr, 0, len(cycle_times) - 1)
-        return np.where(
-            self.backlog > 0.0, cycle_times[safe], np.inf
-        )
+    _ADV_W = 32                   # window width per advance hop
+
+    def _advance(self, rb, rn, ptr, target, k: int) -> np.ndarray:
+        """First cycle ≤ k whose prefix exceeds ``target`` (per queue).
+
+        A drain can cross tens of segments (a near-capacity grant over
+        packet-sized arrivals), so the walk gathers a prefix *window*
+        per queue and jumps to the first exceeding cycle — one gather +
+        argmax per hop instead of one gather per segment. Queues still
+        unresolved after a few hops (pathological) fall back to a
+        per-queue binary search over their own prefix row.
+        """
+        # single steps first: the marginal (partially-granted) queue
+        # usually crosses 1-2 segments, so (P,) gathers win
+        for _ in range(3):
+            move = (ptr <= k) & (self._prefix_at(rb, rn, ptr) <= target)
+            if not move.any():
+                return ptr
+            ptr = ptr + move
+        # windowed hops for the long walks (a big grant over many
+        # packet-sized segments): one gather + argmax per hop
+        W = self._ADV_W
+        offs = np.arange(W, dtype=np.int64)
+        sel = np.nonzero(move)[0]
+        sptr = ptr[sel]
+        srb, srn, star = rb[sel], rn[sel], target[sel]
+        for _ in range(3):
+            idx = sptr[:, None] + offs
+            valid = idx <= k
+            slab = self._prefix_at(
+                np.broadcast_to(srb[:, None], idx.shape).ravel(),
+                np.broadcast_to(srn[:, None], idx.shape).ravel(),
+                np.minimum(idx, k).ravel(),
+            ).reshape(idx.shape)
+            stop = (slab > star[:, None]) | ~valid
+            first = np.argmax(stop, axis=1)
+            found = stop[np.arange(len(sptr)), first]
+            sptr = np.where(found, sptr + first, sptr + W)
+            if found.all():
+                ptr[sel] = sptr
+                return ptr
+        ptr[sel] = sptr
+        rows = sel[np.nonzero(~found)[0]]
+        for i in rows:
+            b, n, t = int(rb[i]), int(rn[i]), target[i]
+            j = int(ptr[i])
+            while j <= k:
+                cidx, off = divmod(j, _CHUNK)
+                buf = self._chunks[cidx]
+                row = buf[b, off:min(_CHUNK, k + 1 - cidx * _CHUNK), n]
+                pos = int(np.searchsorted(row, t, side="right"))
+                if pos < len(row):
+                    j = cidx * _CHUNK + off + pos
+                    break
+                j = (cidx + 1) * _CHUNK
+            ptr[i] = j
+        return ptr
+
+    def hol_key(self) -> np.ndarray:
+        """FCFS sort key: the head segment's arrival cycle (cycle times
+        are strictly increasing, so ordering by ``ptr`` is ordering by
+        head-of-line age — integer argsort, no time lookup)."""
+        return np.where(self.backlog > 0.0, self.ptr, _IKEY_INF)
 
     def serve(self, grants: np.ndarray, k: int):
         # fast path: a grant equal to the whole backlog (the common
-        # under-capacity case) drains the queue exactly, with no pointer
-        # walk over the arrival history
+        # under-capacity case) drains the queue exactly
         full = (grants > 0.0) & (grants == self.backlog)
         budget = np.where(full, 0.0, grants)
-        if np.any(full):
+        if full.any():
+            self.drained = np.where(full, self.cum, self.drained)
             self.backlog = np.where(full, 0.0, self.backlog)
             self.ptr = np.where(full, k + 1, self.ptr)
-            self.hd = np.where(full, 0.0, self.hd)
         part = budget > CAP_EPS
-        if not np.any(part):
+        if not part.any():
             return
-        # slow path over the (few) partially-granted queues only
+        # partial grants: closed-form drain on the prefix history
         rb, rn = np.nonzero(part)
-        bud = budget[rb, rn]
-        ptr = self.ptr[rb, rn]
-        hd = self.hd[rb, rn]
-        bklg = self.backlog[rb, rn]
-        while True:
-            act = (bud > CAP_EPS) & (ptr <= k) & (bklg > 0.0)
-            if not np.any(act):
-                break
-            head = np.where(
-                act, self._head_bits_flat(rb, rn, ptr, hd, k), 0.0
+        target = self.drained[rb, rn] + budget[rb, rn]
+        ptr = self._advance(rb, rn, self.ptr[rb, rn], target, k)
+        seg_end = self._prefix_at(rb, rn, ptr)
+        in_hist = ptr <= k
+        snap = in_hist & (seg_end - target <= SEG_EPS)
+        drained = np.where(snap, seg_end, target)
+        bklg = np.where(in_hist, self.cum[rb, rn] - drained, 0.0)
+        low = bklg < 0.5
+        drained = np.where(low, self.cum[rb, rn], drained)
+        bklg = np.where(low, 0.0, bklg)
+        ptr = np.where(low, k + 1, ptr)
+        # a snap consumed through the segment at ptr; the new head is
+        # the next *arrival* cycle (prefix > drained), not blindly
+        # ptr+1, which may be a zero-arrival cycle and would corrupt
+        # the FCFS head-of-line age (the reference's restore loop)
+        adv = np.nonzero(snap & ~low)[0]
+        if len(adv):
+            ptr[adv] = self._advance(
+                rb[adv], rn[adv], ptr[adv] + 1, drained[adv], k
             )
-            take = np.where(act, np.minimum(bud, head), 0.0)
-            hd += take
-            bklg -= take
-            bud = bud - take
-            resid = np.where(act, head - take, np.inf)
-            drop = act & (resid <= SEG_EPS)
-            bud = np.maximum(bud - np.where(drop, resid, 0.0), 0.0)
-            bklg -= np.where(drop, resid, 0.0)
-            ptr = np.where(drop, ptr + 1, ptr)
-            hd = np.where(drop, 0.0, hd)
-        # restore the head-on-real-segment invariant for the touched set
-        while True:
-            stale = (
-                (bklg > 0.0) & (ptr <= k)
-                & (self._head_bits_flat(rb, rn, ptr, hd, k) <= 0.0)
-            )
-            if not np.any(stale):
-                break
-            ptr = np.where(stale, ptr + 1, ptr)
-            hd = np.where(stale, 0.0, hd)
-        bklg = np.where((ptr > k) | (bklg < 0.5), 0.0, bklg)
+        self.drained[rb, rn] = drained
         self.ptr[rb, rn] = ptr
-        self.hd[rb, rn] = hd
         self.backlog[rb, rn] = bklg
 
 
@@ -322,10 +391,13 @@ def _waterfill(backlog: np.ndarray, hol_fn, cap: np.ndarray) -> np.ndarray:
     """Oldest-first sequential ``take = min(backlog, cap)`` grants,
     expressed as stable argsort + prefix-sum room.
 
-    ``hol_fn`` is called lazily: when total demand sits at least one bit
-    under capacity, every queue is granted its full backlog regardless
-    of age order (room >= suffix >= own backlog for every prefix), so
-    the sort — and computing head-of-line ages at all — is skipped.
+    ``hol_fn`` returns any array that sorts queues by head-of-line age
+    (float times, or integer arrival cycles — strictly-increasing cycle
+    times make them order-equivalent). It is called lazily: when total
+    demand sits at least one bit under capacity, every queue is granted
+    its full backlog regardless of age order (room >= suffix >= own
+    backlog for every prefix), so the sort — and computing head-of-line
+    ages at all — is skipped.
     """
     hard = backlog.sum(axis=1) > cap - 1.0
     if not np.any(hard):
@@ -372,6 +444,8 @@ class _FLQueues:
 
     def backlog_per_onu(self) -> np.ndarray:
         lay = self.lay
+        if lay.identity:
+            return self.qb          # aliased view: callers read only
         out = np.zeros((self.B, self.N))
         if self.single:
             out[:, lay.seg_onus] = self.qb
@@ -395,6 +469,8 @@ class _FLQueues:
 
     def hol_per_onu(self) -> np.ndarray:
         lay = self.lay
+        if lay.identity:
+            return np.where(self.qb > 0.0, self.push_time, np.inf)
         out = np.full((self.B, self.N), np.inf)
         if self.single:
             out[:, lay.seg_onus] = np.where(
@@ -413,7 +489,8 @@ class _FLQueues:
         1-bit segment compaction (which also charges the grant)."""
         lay = self.lay
         if self.single:
-            budget = grants_onu[:, lay.onu]
+            budget = (grants_onu if lay.identity
+                      else grants_onu[:, lay.onu])
             act = (budget > CAP_EPS) & (self.qb > 0.0)
             take = np.where(act, np.minimum(budget, self.qb), 0.0)
             drop = act & (self.qb - take <= SEG_EPS)
@@ -439,28 +516,19 @@ class _FLQueues:
             budget = np.maximum(budget - take - charge, 0.0)
 
 
-def _settle(rem, done, done_t, grants_onu, lay: _Layout, t_done: float):
-    """Attribute granted FL bits to clients in ascending-id order within
-    each ONU — the reference ``_settle`` loop as a prefix-sum formula."""
-    g_cl = grants_onu[:, lay.onu]
-    if lay.single:
-        serve = (g_cl > 0.0) & ~done & (rem > 0.0)
-        take = np.where(serve, np.minimum(rem, g_cl), 0.0)
-    else:
-        csum = np.cumsum(rem, axis=1)
-        base = csum[:, lay.seg_starts] - rem[:, lay.seg_starts]
-        prev = csum - rem - np.repeat(base, lay.seg_len, axis=1)
-        before = g_cl - prev
-        serve = (
-            (g_cl > 0.0) & ~done & (rem > 0.0)
-            & ((prev <= 0.0) | (before > EPS_BITS))
-        )
-        take = np.where(
-            serve, np.minimum(rem, np.maximum(before, 0.0)), 0.0
-        )
-    new_rem = rem - take
-    newly = serve & (new_rem <= EPS_BITS)
-    rem = np.where(newly, 0.0, new_rem)
+def _credit(rem, done, done_t, drained, t_done: float):
+    """Attribute served FL bits to the clients that own them.
+
+    ``drained`` is each client's own queue drain this cycle
+    (``qb_before - qb_after``) — ownership attribution, mirroring the
+    reference's owner-tagged segments: a client is done exactly when its
+    queued update has fully crossed the wire. (The segment-compaction
+    charge zeroes a queue together with its sub-1-bit remnant, so
+    "queue empty" and "remaining ≤ 1 bit" coincide on both backends.)
+    """
+    new_rem = rem - drained
+    newly = ~done & (drained > 0.0) & (new_rem <= EPS_BITS)
+    rem = np.where(newly, 0.0, np.maximum(new_rem, 0.0))
     done = done | newly
     done_t = np.where(newly, t_done, done_t)
     return rem, done, done_t
@@ -495,12 +563,18 @@ def _slot_grants(slot_arrays, backlog_onu, t: float, cyc: float,
 
 def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                stream: Optional[_Stream], mode: str, slot_arrays=None,
-               max_t: float = 600.0):
+               max_t: float = 600.0, fill_unfinished: bool = True):
     """One transfer phase for a (policy-homogeneous) batch of cases.
 
-    Returns per-client completion times ``(B, n_clients)``; NaN for
-    clients not in a case's workload. ``stream`` is the background
-    arrival stream (unused — and may be None — in "bs" mode).
+    Returns ``(done_t, rem)``: per-client completion times
+    ``(B, n_clients)`` (NaN for clients not in a case's workload) and
+    the bits still unserved when the phase ended. With
+    ``fill_unfinished`` (the legacy behaviour) clients cut off at
+    ``max_t`` get ``t + propagation`` as their completion time; the
+    timeline's deadline mode passes False and reads ``rem`` instead
+    (missed-deadline bits defer to the next round). ``stream`` is the
+    background arrival stream (unused — and may be None — in "bs"
+    mode).
     """
     B = rem_init.shape[0]
     N = cfg.n_onus
@@ -519,52 +593,57 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     # paper's isolation claim, and it is exact — not an approximation).
     use_bg = mode == "fcfs"
     bg = _BgQueues(B, N) if use_bg else None
-    ct = np.zeros(4096)
 
     n_left = int(np.count_nonzero(~done & lay.part))
     waiting = lay.part & ~done
+    n_wait = int(np.count_nonzero(waiting))
     t = 0.0
     k = 0
     while t < max_t and n_left:
-        if k >= len(ct):
-            ct = np.concatenate([ct, np.zeros(len(ct))])
-        ct[k] = t
-
         if use_bg:
             bg.push(k, stream.row(k))
-        if np.any(waiting):
-            newly = waiting & ~done & (ready_t <= t + cyc)
-            if np.any(newly):
+        if n_wait:
+            # a waiting client can't already be done (ownership credit
+            # requires a pushed queue), so part & ~done is implied
+            newly = waiting & (ready_t <= t + cyc)
+            n_new = int(np.count_nonzero(newly))
+            if n_new:
                 waiting &= ~newly
+                n_wait -= n_new
                 fl.push(newly, rem, k, t, ready_t)
 
-        backlog_onu = fl.backlog_per_onu()
-        if mode == "fcfs":
-            bg_grants = _waterfill(bg.backlog, lambda: bg.hol(ct), cap_col)
-            fl_grants = np.zeros((B, N))
-            if np.any(backlog_onu > 0.0):
+        # pushed & undone clients hold exactly the nonzero FL queues, so
+        # the idle stretch before the first ready client skips FL work
+        if n_left > n_wait:
+            backlog_onu = fl.backlog_per_onu()
+            if mode == "fcfs":
+                bg_grants = _waterfill(bg.backlog, bg.hol_key, cap_col)
                 cap_fl = cap_col - bg_grants.sum(axis=1)
                 fl_grants = _waterfill(
                     backlog_onu, fl.hol_per_onu, cap_fl
                 )
-        else:
-            fl_grants = _slot_grants(slot_arrays, backlog_onu, t, cyc,
-                                     cap, N)
-
-        if use_bg:
+            else:
+                fl_grants = _slot_grants(slot_arrays, backlog_onu, t,
+                                         cyc, cap, N)
+            if use_bg:
+                bg.serve(bg_grants, k)
+            if np.any(fl_grants > 0.0):
+                prev_qb = fl.qb.copy()
+                fl.serve(fl_grants, backlog_onu)
+                rem, done, done_t = _credit(
+                    rem, done, done_t, prev_qb - fl.qb, t + cyc + prop
+                )
+                n_left = int(np.count_nonzero(~done & lay.part))
+        elif use_bg:
+            bg_grants = _waterfill(bg.backlog, bg.hol_key, cap_col)
             bg.serve(bg_grants, k)
-        if np.any(fl_grants > 0.0):
-            fl.serve(fl_grants, backlog_onu)
-            rem, done, done_t = _settle(
-                rem, done, done_t, fl_grants, lay, t + cyc + prop
-            )
-            n_left = int(np.count_nonzero(~done & lay.part))
         t += cyc
         k += 1
 
-    left = lay.part & ~done
-    done_t = np.where(left, t + prop, done_t)
-    return done_t
+    if fill_unfinished:
+        left = lay.part & ~done
+        done_t = np.where(left, t + prop, done_t)
+    return done_t, rem
 
 
 # ---------------------------------------------------------------------------
@@ -625,12 +704,21 @@ def _stack_slots(per_case, n_onus: int):
 
 def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                          t_round_hint: float = 10.0,
-                         max_t: float = 600.0) -> List["RoundResult"]:
+                         max_t: float = 600.0,
+                         ul_deadline_s: Optional[float] = None,
+                         ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
 
     Semantics match ``repro.net.sim.simulate_round``'s reference
-    implementation per case (property-tested); only the background
-    arrival random stream differs unless arrivals are injected.
+    implementation per case (property-tested); both backends consume the
+    same counter-based arrival stream keyed by (seed, phase,
+    stream_round), so seeded results agree across backends and batch
+    compositions unless arrivals are injected.
+
+    ``ul_deadline_s`` cuts the upload phase at a round deadline: clients
+    still transmitting then keep their unserved bits in the result's
+    ``ul_remaining`` (their ``ul_done`` is NaN) — the multi-round
+    timeline defers those bits to the next round.
     """
     from repro.net.sim import RoundResult  # lazy: sim imports us lazily
 
@@ -650,24 +738,32 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     per_onu_rate = np.array(
         [_case_bg_rate(c, cfg, t_round_hint) / cfg.n_onus for c in cases]
     )
+    ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
+    no_dl = np.zeros((B, lay.n_clients), bool)
+    for b, case in enumerate(cases):
+        if case.no_dl_ids:
+            no_dl[b] = np.isin(lay.ids, list(case.no_dl_ids))
+    no_dl &= lay.part
 
     def providers(sel, phase):
-        out = []
+        from repro.kernels.traffic.ops import make_stream_key
+
+        entries = []
         for b in sel:
             case = cases[b]
             injected = (case.dl_arrivals if phase == "dl"
                         else case.ul_arrivals)
             if injected is not None:
-                out.append(_CaseFixed(injected, cfg.n_onus))
+                entries.append(_CaseFixed(injected, cfg.n_onus))
             else:
-                out.append(_CasePoisson(
-                    np.random.default_rng(
-                        [case.seed, 0 if phase == "dl" else 1]
-                    ),
-                    per_onu_rate[b], cfg.cycle_time_s, cfg.n_onus,
-                    burst_packets=cfg.bg_burst_packets,
+                entries.append((
+                    make_stream_key(case.seed, 0 if phase == "dl" else 1,
+                                    case.stream_round),
+                    burst_lambda(per_onu_rate[b], cfg.cycle_time_s,
+                                 PACKET_BITS, cfg.bg_burst_packets),
                 ))
-        return _Stream(out)
+        return _Stream(entries, cfg.n_onus,
+                       1.0 / cfg.bg_burst_packets)
 
     # ---- downstream ------------------------------------------------------
     dl_done = np.full((B, lay.n_clients), np.nan)
@@ -680,13 +776,13 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     if len(fcfs_rows):
         sub = lay.rows(fcfs_rows)
         rem0 = np.where(
-            sub.part,
+            sub.part & ~no_dl[fcfs_rows],
             np.array([cases[b].workload.model_bits for b in fcfs_rows]
                      )[:, None],
             0.0,
         )
         ready0 = np.zeros_like(rem0)
-        dl_done[fcfs_rows] = _run_phase(
+        dl_done[fcfs_rows], _ = _run_phase(
             cfg, sub, rem0, ready0, providers(fcfs_rows, "dl"), "fcfs",
             max_t=max_t,
         )
@@ -697,19 +793,21 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             + cfg.propagation_s
         )
         dl_done[b] = np.where(lay.part[b], t_bcast, np.nan)
+    dl_done = np.where(no_dl, 0.0, dl_done)
 
     ready_t = dl_done + lay.t_ud
 
     # ---- upstream --------------------------------------------------------
     ul_done = np.full((B, lay.n_clients), np.nan)
+    ul_rem = np.zeros((B, lay.n_clients))
     specs: Dict[int, SliceSpec] = {}
     if len(fcfs_rows):
         sub = lay.rows(fcfs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[fcfs_rows], np.inf)
-        ul_done[fcfs_rows] = _run_phase(
+        ul_done[fcfs_rows], ul_rem[fcfs_rows] = _run_phase(
             cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
-            max_t=max_t,
+            max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
         )
     if len(bs_rows):
         per_case = []
@@ -725,9 +823,10 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         sub = lay.rows(bs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[bs_rows], np.inf)
-        ul_done[bs_rows] = _run_phase(
+        ul_done[bs_rows], ul_rem[bs_rows] = _run_phase(
             cfg, sub, rem0, ready, None, "bs",
-            slot_arrays=slot_arrays, max_t=max_t,
+            slot_arrays=slot_arrays, max_t=ul_max_t,
+            fill_unfinished=ul_deadline_s is None,
         )
 
     # ---- assemble --------------------------------------------------------
@@ -738,14 +837,23 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         dl = {int(i): float(v) for i, v in zip(ids, dl_done[b, sel])}
         rd = {int(i): float(v) for i, v in zip(ids, ready_t[b, sel])}
         ul = {int(i): float(v) for i, v in zip(ids, ul_done[b, sel])}
+        remaining = {
+            int(i): float(v)
+            for i, v in zip(ids, ul_rem[b, sel]) if v > 0.0
+        }
+        if remaining and ul_deadline_s is not None:
+            sync = ul_deadline_s + case.workload.t_aggregate
+        else:
+            sync = max(ul.values()) + case.workload.t_aggregate
         results.append(RoundResult(
             policy=case.policy,
-            sync_time=max(ul.values()) + case.workload.t_aggregate,
+            sync_time=sync,
             dl_done=dl,
             ready=rd,
             ul_done=ul,
             compute_bound=max(rd.values()),
             load=case.load,
             slice_spec=specs.get(b),
+            ul_remaining=remaining if ul_deadline_s is not None else None,
         ))
     return results

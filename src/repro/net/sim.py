@@ -20,7 +20,7 @@ synchronisation time is ``max_i upload_done_i + T_a``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -66,6 +66,10 @@ class RoundResult:
     compute_bound: float
     load: float
     slice_spec: Optional[SliceSpec] = None
+    # set when the round ran under an upload deadline: bits still queued
+    # at the cutoff per client (their ul_done is NaN); the multi-round
+    # timeline defers these to the next round
+    ul_remaining: Optional[Dict[int, float]] = None
 
     @property
     def comm_overhead(self) -> float:
@@ -94,21 +98,27 @@ def _mk_sources(cfg: PONConfig, bg_rate_bps: float, rng) -> List[PoissonSource]:
     ]
 
 
-def _settle(onu_id, fl_bits, clients, remaining, done, t, cfg):
-    """Attribute served FL bits to this ONU's clients, readiness order."""
-    for c in sorted(
-        (c for c in clients
-         if c.client_id % cfg.n_onus == onu_id and c.client_id in remaining),
-        key=lambda c: c.client_id,
-    ):
-        take = min(fl_bits, remaining[c.client_id])
-        remaining[c.client_id] -= take
-        fl_bits -= take
-        if remaining[c.client_id] <= EPS_BITS:
-            done[c.client_id] = t + cfg.cycle_time_s + cfg.propagation_s
-            del remaining[c.client_id]
-        if fl_bits <= EPS_BITS:
-            break
+def _credit(served, remaining, done, t, cfg):
+    """Attribute served FL bits to the clients that own them.
+
+    FL segments are owner-tagged ``("fl", client_id)``, so a grant's
+    bits go to the client whose update they carry — a client is done
+    exactly when its own queued update has crossed the wire. (The seed
+    attributed an ONU's served FL bits across its clients in ascending
+    id order, which let an earlier-id client absorb a later one's queued
+    bits; the later client's residual was never re-enqueued and starved
+    whenever several clients shared an ONU.)
+    """
+    for kind, bits in served.items():
+        if not isinstance(kind, tuple):
+            continue
+        cid = kind[1]
+        if cid not in remaining:
+            continue
+        remaining[cid] -= bits
+        if remaining[cid] <= EPS_BITS:
+            done[cid] = t + cfg.cycle_time_s + cfg.propagation_s
+            del remaining[cid]
 
 
 def _downstream_phase(
@@ -119,8 +129,13 @@ def _downstream_phase(
     reserved: bool,
     max_t: float = 600.0,
     sources=None,
+    skip_ids=frozenset(),
 ) -> Dict[int, float]:
-    """Model distribution; returns per-client download-done time."""
+    """Model distribution; returns per-client download-done time.
+
+    ``skip_ids`` (deadline carriers resuming a partial upload) take no
+    downstream traffic; their download time is 0.
+    """
     clients = workload.clients
     if reserved:
         # BS: one reserved broadcast at (effective) line rate
@@ -128,19 +143,24 @@ def _downstream_phase(
             workload.model_bits / (cfg.line_rate_bps * cfg.efficiency)
             + cfg.propagation_s
         )
-        return {c.client_id: t for c in clients}
+        return {c.client_id: 0.0 if c.client_id in skip_ids else t
+                for c in clients}
 
     queues = [OnuQueue(i) for i in range(cfg.n_onus)]
     qmap = {q.onu_id: q for q in queues}
-    for c in clients:   # per-EC-node unicast copies enqueue at round start
-        qmap[c.client_id % cfg.n_onus].push("fl", workload.model_bits, 0.0)
+    fresh = [c for c in clients if c.client_id not in skip_ids]
+    for c in fresh:     # per-EC-node unicast copies enqueue at round start
+        qmap[c.client_id % cfg.n_onus].push(
+            ("fl", c.client_id), workload.model_bits, 0.0
+        )
     if sources is None:
         sources = _mk_sources(cfg, bg_rate_bps, rng)
     dba = FCFSBestEffort(
         cfg.line_rate_bps, cfg.cycle_time_s, cfg.n_onus, cfg.efficiency
     )
-    remaining = {c.client_id: workload.model_bits for c in clients}
-    done: Dict[int, float] = {}
+    remaining = {c.client_id: workload.model_bits for c in fresh}
+    done: Dict[int, float] = {c.client_id: 0.0 for c in clients
+                              if c.client_id in skip_ids}
     t = 0.0
     while remaining and t < max_t:
         _bg_push(queues, sources, t, cfg.cycle_time_s)
@@ -149,8 +169,8 @@ def _downstream_phase(
             if "bg" in g:
                 q.serve(g["bg"], kind="bg")
             if "fl" in g:
-                q.serve(g["fl"], kind="fl")
-                _settle(onu_id, g["fl"], clients, remaining, done, t, cfg)
+                served = q.serve(g["fl"], kind="fl")
+                _credit(served, remaining, done, t, cfg)
         t += cfg.cycle_time_s
     for cid in list(remaining):
         done[cid] = t + cfg.propagation_s
@@ -168,8 +188,17 @@ def _upstream_phase(
     slots=None,
     max_t: float = 600.0,
     sources=None,
-) -> Dict[int, float]:
-    """Upload phase; returns per-client upload-done time."""
+    deadline_s: Optional[float] = None,
+) -> Tuple[Dict[int, float], Dict[int, float]]:
+    """Upload phase; returns (per-client upload-done time, bits still
+    queued at the cutoff).
+
+    With ``deadline_s`` the phase stops at the round deadline and the
+    unfinished clients' remaining bits are reported instead of being
+    timed out at ``max_t`` (the multi-round deferral hook).
+    """
+    if deadline_s is not None:
+        max_t = deadline_s
     clients = workload.clients
     queues = [OnuQueue(i) for i in range(cfg.n_onus)]
     qmap = {q.onu_id: q for q in queues}
@@ -195,13 +224,10 @@ def _upstream_phase(
     t = 0.0
     while remaining and t < max_t:
         for cid, t_ready in list(pending.items()):
-            if cid not in remaining:
-                # finished before ever enqueuing: a same-ONU grant was
-                # attributed to this client by the settle order
-                del pending[cid]
-                continue
             if t_ready <= t + cfg.cycle_time_s:
-                qmap[cid % cfg.n_onus].push("fl", remaining[cid], max(t_ready, t))
+                qmap[cid % cfg.n_onus].push(
+                    ("fl", cid), remaining[cid], max(t_ready, t)
+                )
                 del pending[cid]
         _bg_push(queues, sources, t, cfg.cycle_time_s)
         grants = (
@@ -212,12 +238,17 @@ def _upstream_phase(
             if "bg" in g:
                 q.serve(g["bg"], kind="bg")
             if "fl" in g:
-                q.serve(g["fl"], kind="fl")
-                _settle(onu_id, g["fl"], clients, remaining, done, t, cfg)
+                served = q.serve(g["fl"], kind="fl")
+                _credit(served, remaining, done, t, cfg)
         t += cfg.cycle_time_s
-    for cid in list(remaining):
-        done[cid] = t + cfg.propagation_s
-    return done
+    if deadline_s is None:
+        for cid in list(remaining):
+            done[cid] = t + cfg.propagation_s
+        remaining = {}
+    else:
+        for cid in remaining:
+            done[cid] = float("nan")
+    return done, dict(remaining)
 
 
 def simulate_round(
@@ -230,17 +261,27 @@ def simulate_round(
     backend: str = "vectorized",
     _dl_sources=None,
     _ul_sources=None,
+    ul_deadline_s: Optional[float] = None,
+    no_dl_ids=frozenset(),
+    stream_round: int = 0,
 ) -> RoundResult:
     """Simulate one synchronisation round under ``policy`` in {fcfs, bs}.
 
     ``backend="vectorized"`` (default) runs the round on the batched
     array engine (``repro.net.engine``); ``backend="reference"`` keeps
     the original cycle-by-cycle simulator. Both implement the same
-    semantics (property-tested against each other); their background
-    arrival random streams differ, so per-seed results are backend-
-    specific. ``_dl_sources``/``_ul_sources`` inject per-ONU arrival
-    sources into the reference phases (parity-test hook; forces the
-    reference backend).
+    semantics (property-tested against each other). The reference
+    backend keeps its own seeded numpy arrival draws unless
+    ``_dl_sources``/``_ul_sources`` inject per-ONU sources (parity-test
+    hook; forces the reference backend) — feeding it
+    ``repro.net.traffic.CounterStream`` sources replays the engine's
+    exact counter-based arrival process.
+
+    ``ul_deadline_s`` cuts the upload phase at a round deadline
+    (unfinished bits come back in ``RoundResult.ul_remaining``);
+    ``no_dl_ids`` marks deadline carriers that skip the model download;
+    ``stream_round`` keys the engine's arrival stream for multi-round
+    timelines.
     """
     if backend not in ("vectorized", "reference"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -251,8 +292,10 @@ def simulate_round(
         return simulate_round_sweep(
             cfg,
             [SweepCase(workload=workload, load=total_load, policy=policy,
-                       seed=seed)],
+                       seed=seed, stream_round=stream_round,
+                       no_dl_ids=frozenset(no_dl_ids))],
             t_round_hint=t_round_hint,
+            ul_deadline_s=ul_deadline_s,
         )[0]
 
     rng = np.random.default_rng(seed)
@@ -269,7 +312,7 @@ def simulate_round(
 
     dl_done = _downstream_phase(
         cfg, workload, bg_rate, rng, reserved=(policy == "bs"),
-        sources=_dl_sources,
+        sources=_dl_sources, skip_ids=frozenset(no_dl_ids),
     )
     ready = {c.client_id: dl_done[c.client_id] + c.t_ud for c in clients}
     spec = slots = None
@@ -291,17 +334,20 @@ def simulate_round(
             capacity_bps=cfg.line_rate_bps * cfg.efficiency, h=1,
         )
         slots = schedule_slots(profiles, spec, round_start=0.0)
-        ul_done = _upstream_phase(
+        ul_done, ul_remaining = _upstream_phase(
             cfg, workload, ready, bg_rate, rng, "bs", spec, slots,
-            sources=_ul_sources,
+            sources=_ul_sources, deadline_s=ul_deadline_s,
         )
     else:
-        ul_done = _upstream_phase(
+        ul_done, ul_remaining = _upstream_phase(
             cfg, workload, ready, bg_rate, rng, "fcfs",
-            sources=_ul_sources,
+            sources=_ul_sources, deadline_s=ul_deadline_s,
         )
 
-    sync = max(ul_done.values()) + workload.t_aggregate
+    if ul_remaining and ul_deadline_s is not None:
+        sync = ul_deadline_s + workload.t_aggregate
+    else:
+        sync = max(ul_done.values()) + workload.t_aggregate
     compute_bound = max(ready.values())
     return RoundResult(
         policy=policy,
@@ -312,4 +358,5 @@ def simulate_round(
         compute_bound=compute_bound,
         load=total_load,
         slice_spec=spec,
+        ul_remaining=ul_remaining if ul_deadline_s is not None else None,
     )

@@ -1,0 +1,422 @@
+"""Multi-round timeline engine over the batched PON round engine.
+
+The paper's headline quantities (Fig. 3 training-time saving,
+accuracy-vs-wall-clock) are *multi-round*: R synchronisation rounds back
+to back, with elastic client membership and (optionally) per-round
+deadlines. After PR 2 the co-simulation still drove the vectorized
+engine one round at a time from a Python loop, rebuilding layout and
+queue state every round. This module advances the whole training
+timeline in one call:
+
+* **Folded mode** (no deadlines): rounds are independent given their
+  start times, so the round axis folds into the engine's batch axis —
+  all R rounds of all B cases run as ONE stacked simulation. One
+  ``_Layout`` build, one ``_BgQueues``/``_FLQueues`` allocation carried
+  across the whole timeline, one cycle loop whose per-cycle Python cost
+  is amortised over R·B rows instead of B. The counter-based arrival
+  sampler (``repro.kernels.traffic``) keys round ``r``'s stream by
+  ``(seed, phase, r)``, so every row addresses its own arrivals with no
+  sequential draw state.
+* **Sequential mode** (round deadlines): a client still uploading at the
+  deadline *defers* its remaining update bits to the next round (it
+  skips the next model download and resumes the stale upload — array
+  state carried between rounds), which couples consecutive rounds; the
+  engine then advances round by round, still batched over cases.
+
+``simulate_timeline_reference`` is the parity oracle: an explicit
+per-round Python loop over the *cycle-by-cycle dict simulator*
+(``backend="reference"``), fed the engine's exact counter streams via
+``repro.net.traffic.CounterStream``. Tests require sync times and
+per-round served bits to agree at rtol 1e-6, including elastic
+membership and deadline deferral.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.net.engine import SweepCase, simulate_round_sweep
+from repro.net.sim import FLRoundWorkload, RoundResult
+
+__all__ = [
+    "TimelineSchedule",
+    "TimelineRound",
+    "TimelineResult",
+    "simulate_timeline_sweep",
+    "simulate_timeline_per_round",
+    "simulate_timeline_reference",
+]
+
+
+@dataclass(frozen=True)
+class TimelineSchedule:
+    """The multi-round structure shared by every case of a sweep.
+
+    ``membership``: optional ``(n_rounds, n_clients)`` bool mask over
+    each case's ``workload.clients`` *list positions* — a client masked
+    out of round r takes no part in it (downloads nothing, uploads no
+    bits). Deferred carriers override the mask: an in-flight stale
+    upload finishes regardless of membership (defer, not drop).
+
+    ``m_ud_bits``: optional per-round upload-size override, ``(n_rounds,)``
+    scalars or ``(n_rounds, n_clients)`` — the co-simulation feeds the
+    measured (compressed) update size of each round.
+
+    ``deadline_s``: optional round deadline(s), scalar or ``(n_rounds,)``
+    — the upload phase is cut at the deadline and unfinished clients
+    carry their remaining bits into the next round.
+    """
+
+    n_rounds: int
+    membership: Optional[np.ndarray] = None
+    m_ud_bits: Optional[np.ndarray] = None
+    deadline_s: Optional[object] = None
+
+    def __post_init__(self):
+        if self.n_rounds < 1:
+            raise ValueError("n_rounds must be >= 1")
+        if self.membership is not None:
+            m = np.asarray(self.membership, bool)
+            if m.ndim != 2 or m.shape[0] != self.n_rounds:
+                raise ValueError(
+                    f"membership must be (n_rounds, n_clients); "
+                    f"got {m.shape}"
+                )
+            object.__setattr__(self, "membership", m)
+        if self.deadline_s is not None:
+            d = np.asarray(self.deadline_s, np.float64).reshape(-1)
+            if d.size not in (1, self.n_rounds):
+                raise ValueError(
+                    f"deadline_s must be scalar or (n_rounds,); "
+                    f"got {d.size} values for {self.n_rounds} rounds"
+                )
+        if self.m_ud_bits is not None:
+            m = np.asarray(self.m_ud_bits, np.float64)
+            if m.shape[0] != self.n_rounds:
+                raise ValueError(
+                    f"m_ud_bits must lead with n_rounds="
+                    f"{self.n_rounds}; got shape {m.shape}"
+                )
+
+    def deadline(self, r: int) -> Optional[float]:
+        if self.deadline_s is None:
+            return None
+        d = np.asarray(self.deadline_s, np.float64).reshape(-1)
+        return float(d[r] if d.size > 1 else d[0])
+
+    def round_m_ud(self, r: int, j: int, default: float) -> float:
+        if self.m_ud_bits is None:
+            return default
+        m = np.asarray(self.m_ud_bits, np.float64)
+        return float(m[r] if m.ndim == 1 else m[r, j])
+
+
+@dataclass
+class TimelineRound:
+    """One round of one case's timeline."""
+
+    round_index: int
+    sync_time: float
+    t_start: float
+    t_end: float
+    ul_bits: Dict[int, float]       # bits actually served this round
+    arrived: List[int]              # clients whose update completed
+    deferred: Dict[int, float]      # bits carried into the next round
+    result: Optional[RoundResult]   # None for empty (no-client) rounds
+
+
+@dataclass
+class TimelineResult:
+    policy: str
+    load: float
+    seed: int
+    rounds: List[TimelineRound]
+
+    @property
+    def sync_times(self) -> np.ndarray:
+        return np.array([r.sync_time for r in self.rounds])
+
+    @property
+    def total_time_s(self) -> float:
+        return float(self.sync_times.sum())
+
+
+# ---------------------------------------------------------------------------
+# per-round workload construction (shared by engine and reference paths)
+# ---------------------------------------------------------------------------
+
+
+def _round_setup(case: SweepCase, schedule: TimelineSchedule, r: int,
+                 carry: Dict[int, float]):
+    """(clients_r, no_dl_ids, rem_start) for round ``r`` of one case.
+
+    Fresh members take the round's upload size; carriers (clients with
+    deferred bits) re-enter with their remaining bits, zero compute time
+    and no model download, regardless of the membership mask.
+    """
+    clients = case.workload.clients
+    mask = (schedule.membership[r] if schedule.membership is not None
+            else np.ones(len(clients), bool))
+    out = []
+    rem_start: Dict[int, float] = {}
+    for j, c in enumerate(clients):
+        if c.client_id in carry:
+            bits = carry[c.client_id]
+            out.append(replace(c, t_ud=0.0, t_dl=0.0, m_ud_bits=bits))
+            rem_start[c.client_id] = bits
+        elif mask[j]:
+            bits = schedule.round_m_ud(r, j, c.m_ud_bits)
+            out.append(replace(c, m_ud_bits=bits))
+            rem_start[c.client_id] = bits
+    return out, frozenset(carry), rem_start
+
+
+def _round_view(r: int, t_start: float, result: Optional[RoundResult],
+                rem_start: Dict[int, float], t_aggregate: float,
+                ) -> Tuple[TimelineRound, Dict[int, float]]:
+    """Fold one round's RoundResult into a TimelineRound + next carry."""
+    if result is None:
+        rnd = TimelineRound(
+            round_index=r, sync_time=t_aggregate, t_start=t_start,
+            t_end=t_start + t_aggregate, ul_bits={}, arrived=[],
+            deferred={}, result=None,
+        )
+        return rnd, {}
+    deferred = dict(result.ul_remaining or {})
+    ul_bits = {
+        cid: rem_start[cid] - deferred.get(cid, 0.0)
+        for cid in rem_start
+    }
+    arrived = sorted(cid for cid in rem_start if cid not in deferred)
+    rnd = TimelineRound(
+        round_index=r, sync_time=result.sync_time, t_start=t_start,
+        t_end=t_start + result.sync_time, ul_bits=ul_bits,
+        arrived=arrived, deferred=deferred, result=result,
+    )
+    return rnd, deferred
+
+
+def _validate(cases: Sequence[SweepCase], schedule: TimelineSchedule):
+    cases = list(cases)
+    if not cases:
+        raise ValueError("timeline sweep needs at least one case")
+    for case in cases:
+        if case.dl_arrivals is not None or case.ul_arrivals is not None:
+            raise ValueError(
+                "timeline cases draw from counter streams; injected "
+                "arrival matrices are a single-round parity hook"
+            )
+        if schedule.membership is not None and (
+            schedule.membership.shape[1] != len(case.workload.clients)
+        ):
+            raise ValueError(
+                "membership mask width must match workload.clients"
+            )
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# engine-backed drivers
+# ---------------------------------------------------------------------------
+
+
+def _sequential(cfg, cases, schedule, t_round_hint, max_t):
+    """Round-by-round engine advance, carrying deferred bits (the only
+    legal order under deadlines; also the PR 2 per-round loop that the
+    folded mode is benchmarked against)."""
+    B = len(cases)
+    carries: List[Dict[int, float]] = [{} for _ in range(B)]
+    t_now = np.zeros(B)
+    out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
+                          rounds=[]) for c in cases]
+    for r in range(schedule.n_rounds):
+        row_cases = []
+        row_meta = []
+        for b, case in enumerate(cases):
+            clients_r, no_dl, rem_start = _round_setup(
+                case, schedule, r, carries[b]
+            )
+            if not clients_r:
+                row_meta.append((b, None, rem_start))
+                continue
+            wl = FLRoundWorkload(
+                clients=clients_r,
+                model_bits=case.workload.model_bits,
+                t_aggregate=case.workload.t_aggregate,
+            )
+            row_meta.append((b, len(row_cases), rem_start))
+            row_cases.append(SweepCase(
+                workload=wl, load=case.load, policy=case.policy,
+                seed=case.seed, stream_round=r, no_dl_ids=no_dl,
+            ))
+        results = simulate_round_sweep(
+            cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
+            ul_deadline_s=schedule.deadline(r),
+        ) if row_cases else []
+        for b, ridx, rem_start in row_meta:
+            res = results[ridx] if ridx is not None else None
+            rnd, carry = _round_view(
+                r, float(t_now[b]), res, rem_start,
+                cases[b].workload.t_aggregate,
+            )
+            out[b].rounds.append(rnd)
+            carries[b] = carry
+            t_now[b] += rnd.sync_time
+    return out
+
+
+def _folded(cfg, cases, schedule, t_round_hint, max_t):
+    """The whole timeline as ONE stacked simulation: the round axis is
+    folded into the engine batch axis (rounds are independent given
+    their start times when nothing defers)."""
+    rows = []
+    meta = []            # (b, r, rem_start, row_index or None)
+    for b, case in enumerate(cases):
+        for r in range(schedule.n_rounds):
+            clients_r, _, rem_start = _round_setup(case, schedule, r, {})
+            if not clients_r:
+                meta.append((b, r, rem_start, None))
+                continue
+            wl = FLRoundWorkload(
+                clients=clients_r,
+                model_bits=case.workload.model_bits,
+                t_aggregate=case.workload.t_aggregate,
+            )
+            meta.append((b, r, rem_start, len(rows)))
+            rows.append(SweepCase(
+                workload=wl, load=case.load, policy=case.policy,
+                seed=case.seed, stream_round=r,
+            ))
+    results = simulate_round_sweep(
+        cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
+    ) if rows else []
+    out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
+                          rounds=[]) for c in cases]
+    t_now = np.zeros(len(cases))
+    for b, r, rem_start, ridx in meta:
+        res = results[ridx] if ridx is not None else None
+        rnd, _ = _round_view(
+            r, float(t_now[b]), res, rem_start,
+            cases[b].workload.t_aggregate,
+        )
+        out[b].rounds.append(rnd)
+        t_now[b] += rnd.sync_time
+    return out
+
+
+def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
+                            schedule: TimelineSchedule,
+                            mode: str = "auto",
+                            t_round_hint: float = 10.0,
+                            max_t: float = 600.0) -> List[TimelineResult]:
+    """Advance the full multi-round timeline for every case.
+
+    ``mode="auto"`` folds the round axis into the batch (one stacked
+    simulation) when the schedule has no deadlines and falls back to the
+    sequential carry loop otherwise; ``"folded"``/``"sequential"`` force
+    a path (parity tests check they agree when both are legal).
+    """
+    cases = _validate(cases, schedule)
+    if mode == "auto":
+        mode = "sequential" if schedule.deadline_s is not None else "folded"
+    if mode == "folded":
+        if schedule.deadline_s is not None:
+            raise ValueError(
+                "deadline deferral couples consecutive rounds; folded "
+                "mode requires a schedule without deadlines"
+            )
+        return _folded(cfg, cases, schedule, t_round_hint, max_t)
+    if mode == "sequential":
+        return _sequential(cfg, cases, schedule, t_round_hint, max_t)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
+                                schedule: TimelineSchedule,
+                                t_round_hint: float = 10.0,
+                                max_t: float = 600.0,
+                                ) -> List[TimelineResult]:
+    """The PR 2 per-round loop: one engine call per round, queue state
+    rebuilt every round. Identical results to ``simulate_timeline_sweep``
+    (same streams); kept as the benchmark baseline."""
+    cases = _validate(cases, schedule)
+    return _sequential(cfg, cases, schedule, t_round_hint, max_t)
+
+
+# ---------------------------------------------------------------------------
+# reference loop (parity oracle)
+# ---------------------------------------------------------------------------
+
+
+def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
+                                schedule: TimelineSchedule,
+                                t_round_hint: float = 10.0,
+                                max_t: float = 600.0,
+                                ) -> List[TimelineResult]:
+    """Per-round loop over the cycle-by-cycle *dict* simulator.
+
+    Every round rebuilds the reference simulator from scratch and feeds
+    it the engine's counter-based arrival streams
+    (``CounterStream.source``), so the timeline engine must reproduce
+    its sync times and per-round bits exactly (rtol 1e-6) — including
+    elastic membership and deadline deferral.
+    """
+    from repro.kernels.traffic.ops import make_stream_key
+    from repro.net.engine import _case_bg_rate
+    from repro.net.sim import simulate_round
+    from repro.net.traffic import CounterStream
+
+    cases = _validate(cases, schedule)
+    out = []
+    for case in cases:
+        carry: Dict[int, float] = {}
+        t_now = 0.0
+        res = TimelineResult(policy=case.policy, load=case.load,
+                             seed=case.seed, rounds=[])
+        for r in range(schedule.n_rounds):
+            clients_r, no_dl, rem_start = _round_setup(
+                case, schedule, r, carry
+            )
+            if not clients_r:
+                rnd, carry = _round_view(
+                    r, t_now, None, rem_start,
+                    case.workload.t_aggregate,
+                )
+                res.rounds.append(rnd)
+                t_now += rnd.sync_time
+                continue
+            wl = FLRoundWorkload(
+                clients=clients_r,
+                model_bits=case.workload.model_bits,
+                t_aggregate=case.workload.t_aggregate,
+            )
+            row = SweepCase(workload=wl, load=case.load,
+                            policy=case.policy, seed=case.seed)
+            per_onu = _case_bg_rate(row, cfg, t_round_hint) / cfg.n_onus
+            streams = [
+                CounterStream(
+                    make_stream_key(case.seed, phase, r), per_onu,
+                    cfg.cycle_time_s, cfg.n_onus,
+                    burst_packets=cfg.bg_burst_packets,
+                )
+                for phase in (0, 1)
+            ]
+            result = simulate_round(
+                cfg, wl, case.load, case.policy, seed=case.seed,
+                t_round_hint=t_round_hint, backend="reference",
+                _dl_sources=[streams[0].source(i)
+                             for i in range(cfg.n_onus)],
+                _ul_sources=[streams[1].source(i)
+                             for i in range(cfg.n_onus)],
+                ul_deadline_s=schedule.deadline(r),
+                no_dl_ids=no_dl,
+            )
+            rnd, carry = _round_view(
+                r, t_now, result, rem_start, case.workload.t_aggregate
+            )
+            res.rounds.append(rnd)
+            t_now += rnd.sync_time
+        out.append(res)
+    return out

@@ -55,6 +55,75 @@ class PrecomputedSource:
         return float(self.rows[i])
 
 
+def burst_lambda(
+    rate_bps: float,
+    cycle_s: float,
+    packet_bits: float = PACKET_BITS,
+    burst_packets: float = 16.0,
+) -> float:
+    """Per-cycle burst rate λ for an offered per-ONU bit rate."""
+    if rate_bps <= 0:
+        return 0.0
+    return rate_bps / (packet_bits * burst_packets) * cycle_s
+
+
+class CounterStream:
+    """Counter-based arrival streams for one (case, phase, round).
+
+    Wraps ``repro.kernels.traffic`` so the *reference* cycle-by-cycle
+    simulator can consume the exact same keyed arrival process as the
+    vectorized engine: ``source(onu)`` returns a ``PoissonSource``-shaped
+    object whose ``arrivals`` replays the counter stream one cycle at a
+    time. Rows are materialised in shared chunks (every ONU of a stream
+    reads the same sampler output), so the per-ONU cursor objects stay
+    O(1) per cycle.
+    """
+
+    def __init__(self, key, rate_bps: float, cycle_s: float, n_onus: int,
+                 packet_bits: float = PACKET_BITS,
+                 burst_packets: float = 16.0, chunk: int = 1024):
+        self.key = key
+        self.n_onus = n_onus
+        self.packet_bits = packet_bits
+        self.inv_burst = 1.0 / burst_packets
+        self.lam = burst_lambda(rate_bps, cycle_s, packet_bits,
+                                burst_packets)
+        self.chunk = chunk
+        self._base = 0
+        self._buf = None
+
+    def rows(self, k: int):
+        """The ``(n_onus,)`` arrival bits of cycle ``k``."""
+        if self._buf is None or not (
+            self._base <= k < self._base + len(self._buf)
+        ):
+            from repro.kernels.traffic.ops import sample_arrival_bits
+
+            self._base = k
+            self._buf = sample_arrival_bits(
+                self.key, k, self.chunk, self.n_onus, self.lam,
+                self.inv_burst, self.packet_bits,
+            )[0]
+        return self._buf[k - self._base]
+
+    def source(self, onu: int) -> "CounterSource":
+        return CounterSource(self, onu)
+
+
+@dataclass
+class CounterSource:
+    """Per-ONU cursor view over a :class:`CounterStream`."""
+
+    stream: CounterStream
+    onu: int
+    cursor: int = 0
+
+    def arrivals(self, dt_s: float) -> float:
+        k = self.cursor
+        self.cursor += 1
+        return float(self.stream.rows(k)[self.onu])
+
+
 def per_onu_sources(
     total_rate_bps: float,
     n_onus: int,

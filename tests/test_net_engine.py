@@ -238,6 +238,30 @@ class TestSweepAPI:
             )
 
 
+class TestBgQueueSnapHead:
+    """A partial grant whose sub-1-bit residue snaps a segment away
+    must leave the head pointer on the next *arrival* cycle (the
+    reference's restore loop), not on a possibly-empty ptr+1 cycle."""
+
+    def test_snap_advances_to_next_real_segment(self):
+        from repro.net.dba import OnuQueue
+        from repro.net.engine import _BgQueues
+
+        bg = _BgQueues(1, 1)
+        ref = OnuQueue(0)
+        arrivals = [1000.0, 0.0, 0.0, 500.0]
+        for k, bits in enumerate(arrivals):
+            bg.push(k, np.array([[bits]]))
+            if bits:
+                ref.push("bg", bits, float(k))
+        bg.serve(np.array([[999.5]]), k=3)
+        ref.serve(999.5, kind="bg")
+        assert bg.backlog[0, 0] == pytest.approx(ref.backlog)
+        # FCFS age key == the surviving segment's arrival cycle
+        assert int(bg.hol_key()[0, 0]) == 3
+        assert ref.hol_time == pytest.approx(3.0)
+
+
 class TestServeRebuild:
     """The single-pass OnuQueue.serve keeps its exact semantics."""
 
