@@ -1,0 +1,219 @@
+"""CI benchmark-regression gate.
+
+Three BENCH_*.json baselines are committed (net engine, timeline,
+multi-PON) but were, until now, write-only: nothing compared a fresh
+CI measurement against them.  This script extracts *throughput-shaped*
+metrics (``rounds_per_sec``, ``speedup*`` — higher is better) from any
+of the repo's benchmark artifacts:
+
+* harness artifacts (``benchmarks/run.py --json``): ``rows`` whose
+  ``derived`` string carries ``key=value`` tokens;
+* measurement payloads (``benchmarks/net_engine.py --json`` etc.):
+  known per-benchmark shapes, emitted under the same key names the
+  harness rows use, so current-vs-baseline keys line up whenever the
+  measured configuration matches (config-dependent one-off numbers —
+  e.g. the timeline sweep speedup, whose round count differs between
+  the fast tier and ``--full`` — embed the config in the key and
+  simply never match).
+
+The gate fails (exit 1) when any matching key regresses by more than
+``--threshold`` (default 25%).  Zero matching keys is a wiring error
+(exit 2), not a pass.
+
+``--update-baselines`` records the current metrics into
+``benchmarks/baseline_overrides.json`` — entries there take precedence
+over the committed payloads (the escape hatch for accepted machine or
+algorithm changes; commit the file).  ``--self-test`` checks the gate
+itself: a synthetic 25%+ regression of the baselines must fail and an
+unchanged copy must pass.
+
+Usage (CI)::
+
+    python benchmarks/compare.py \
+        --current BENCH_ci.json BENCH_timeline_ci.json \
+        --baseline BENCH_net_engine.json BENCH_timeline.json \
+                   BENCH_multi_pon.json
+    python benchmarks/compare.py --self-test --baseline BENCH_*.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import Dict, List
+
+_TOKEN = re.compile(r"(rounds_per_sec|speedup\w*)=([0-9.eE+-]+)x?")
+
+OVERRIDES_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "baseline_overrides.json")
+
+
+def _rows_metrics(payload: dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for row in payload.get("rows", []):
+        derived = str(row.get("derived", ""))
+        for key, val in _TOKEN.findall(derived):
+            try:
+                out[f"{row['name']}.{key}"] = float(val)
+            except ValueError:
+                continue
+    return out
+
+
+def _payload_metrics(payload: dict) -> Dict[str, float]:
+    bench = payload.get("benchmark")
+    out: Dict[str, float] = {}
+    if bench == "fig2b_sweep_reference_vs_vectorized":
+        for tp in payload.get("engine_throughput", []):
+            out[f"net_engine_round_n{tp['n_onus']}.rounds_per_sec"] = (
+                tp["rounds_per_sec"]
+            )
+    elif bench == "fig3_multiround_timeline_vs_per_round":
+        # the sweep speedup depends on the measured round count: key it
+        # by config so fast-tier (R=6) and --full (R=24) never collide
+        out[f"timeline_fig3_sweep_r{payload['n_rounds']}.speedup"] = (
+            payload["speedup"]
+        )
+        for tp in payload.get("throughput", []):
+            out[f"timeline_rounds_n{tp['n_onus']}.rounds_per_sec"] = (
+                tp["rounds_per_sec"]
+            )
+    elif bench == "multi_pon_stacked_vs_per_pon_loop":
+        for cell in payload.get("cells", []):
+            name = f"multi_pon_round_n{cell['n_onus']}_p{cell['n_pons']}"
+            out[f"{name}.rounds_per_sec"] = cell["rounds_per_sec"]
+            if "speedup_vs_ref_loop" in cell:
+                out[f"{name}.speedup_vs_ref_loop"] = (
+                    cell["speedup_vs_ref_loop"]
+                )
+    return out
+
+
+def extract_metrics(payload: dict) -> Dict[str, float]:
+    """Throughput-shaped metrics (higher = better) from any artifact."""
+    if "rows" in payload:
+        return _rows_metrics(payload)
+    return _payload_metrics(payload)
+
+
+def load_metrics(paths: List[str]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for path in paths:
+        with open(path) as f:
+            payload = json.load(f)
+        got = extract_metrics(payload)
+        if not got:
+            print(f"warning: no throughput metrics in {path}",
+                  file=sys.stderr)
+        out.update(got)
+    return out
+
+
+def apply_overrides(baseline: Dict[str, float],
+                    path: str = OVERRIDES_PATH) -> Dict[str, float]:
+    if os.path.exists(path):
+        with open(path) as f:
+            overrides = json.load(f)
+        baseline = dict(baseline)
+        baseline.update({k: float(v) for k, v in overrides.items()})
+    return baseline
+
+
+def compare(current: Dict[str, float], baseline: Dict[str, float],
+            threshold: float) -> List[str]:
+    """Regression messages for matching keys (empty = gate passes)."""
+    regressions = []
+    matched = sorted(set(current) & set(baseline))
+    if not matched:
+        raise SystemExit(
+            "benchmark gate mis-wired: no matching keys between current "
+            f"metrics ({sorted(current)}) and baselines "
+            f"({sorted(baseline)})"
+        )
+    for key in matched:
+        cur, base = current[key], baseline[key]
+        if base <= 0:
+            continue
+        drop = 1.0 - cur / base
+        status = "REGRESSION" if drop > threshold else "ok"
+        print(f"{status:>10}  {key}: baseline={base:.4g} "
+              f"current={cur:.4g} ({-drop:+.1%})")
+        if drop > threshold:
+            regressions.append(
+                f"{key}: {base:.4g} -> {cur:.4g} "
+                f"({drop:.1%} > {threshold:.0%} threshold)"
+            )
+    return regressions
+
+
+def self_test(baseline: Dict[str, float], threshold: float) -> int:
+    """The gate must fail a synthetic 25%+ regression and pass an
+    unchanged measurement."""
+    degraded = {k: v * (1.0 - threshold - 0.05) for k, v in
+                baseline.items()}
+    print(f"--- self-test: synthetic {threshold + 0.05:.0%} regression "
+          "(must fail) ---")
+    if not compare(degraded, baseline, threshold):
+        print("self-test FAILED: synthetic regression passed the gate",
+              file=sys.stderr)
+        return 1
+    print("--- self-test: unchanged metrics (must pass) ---")
+    if compare(dict(baseline), baseline, threshold):
+        print("self-test FAILED: unchanged metrics flagged",
+              file=sys.stderr)
+        return 1
+    print("self-test OK: gate rejects regressions and passes parity")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", nargs="+", default=[],
+                    metavar="JSON", help="freshly measured artifacts")
+    ap.add_argument("--baseline", nargs="+", required=True,
+                    metavar="JSON", help="committed baseline payloads")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional drop (default 0.25)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="record current metrics as overrides instead "
+                         "of failing")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate trips on a synthetic "
+                         "regression")
+    args = ap.parse_args(argv)
+
+    baseline = apply_overrides(load_metrics(args.baseline))
+    if args.self_test:
+        return self_test(baseline, args.threshold)
+    if not args.current:
+        ap.error("--current is required unless --self-test")
+    current = load_metrics(args.current)
+    if args.update_baselines:
+        overrides = {}
+        if os.path.exists(OVERRIDES_PATH):
+            with open(OVERRIDES_PATH) as f:
+                overrides = json.load(f)
+        overrides.update(
+            {k: current[k] for k in set(current) & set(baseline)}
+        )
+        with open(OVERRIDES_PATH, "w") as f:
+            json.dump(overrides, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(overrides)} baseline overrides to "
+              f"{OVERRIDES_PATH}")
+        return 0
+    regressions = compare(current, baseline, args.threshold)
+    if regressions:
+        print("\nbenchmark regressions past the gate threshold:",
+              file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("benchmark gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

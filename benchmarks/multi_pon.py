@@ -1,0 +1,252 @@
+"""Multi-PON stacked engine vs the per-PON Python loops.
+
+The 1000+-ONU story: ``n_pons`` wavelength/OLT segments (each sized
+like the paper's PON) simulated as ONE stacked engine call with
+``(case, pon)`` rows, against two per-PON Python loops:
+
+* ``ref_loop`` — the cycle-by-cycle per-PON reference loop + CPS
+  post-pass (``simulate_multi_pon_round``, the parity oracle): the
+  semantically identical baseline, consuming the same pon-keyed
+  counter streams, so its results must match the stacked engine at
+  rtol 1e-6 (asserted).  This is the honest "what stacking replaces"
+  number — a dict simulator looping PONs inside a Python cycle loop.
+* ``loop`` — a Python loop of one *vectorized* single-PON engine call
+  per segment (each segment remapped to a standalone PON; streams
+  keyed ``pon=0`` per call, so agreement is statistical, asserted
+  loosely).  This isolates the pure batching dividend of folding the
+  PON axis, with the engine's array kernels on both sides.
+
+Cells: ``n_onus`` (total) x ``n_pons``; each PON carries
+``n_onus / n_pons`` ONUs at a line rate scaled so the offered load
+stays feasible and rounds keep the paper's ~5 s shape (as in
+``benchmarks/net_engine.py``).
+
+``python benchmarks/multi_pon.py --full --json BENCH_multi_pon.json``
+measures the full {1024, 2048, 4096} x {8, 16, 32} grid (reference
+loop at the 4096-ONU acceptance cell; minutes) and writes the
+checked-in JSON; the harness ``run()`` (fast tier) times the small
+(256, 4) cell that the CI benchmark-regression gate compares against
+the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.slicing import ClientProfile
+from repro.net import (
+    FLRoundWorkload,
+    MultiPonTopology,
+    PONConfig,
+    SweepCase,
+    simulate_multi_pon_round,
+    simulate_round_sweep,
+)
+
+TIER = "fast"
+
+M_BITS = 26.416e6
+LOAD = 0.8
+POLICY = "fcfs"
+
+FAST_CELL = (256, 4)
+FULL_GRID = [(n, p) for n in (1024, 2048, 4096) for p in (8, 16, 32)]
+
+
+def _t_uds(n_total, seed=42):
+    return np.random.default_rng(seed).uniform(1.0, 5.0, n_total)
+
+
+def _pon_cfg(n_total, n_pons):
+    n_local = n_total // n_pons
+    return PONConfig(n_onus=n_local, line_rate_bps=10e9 * n_local / 128)
+
+
+def _stacked_case(n_total, n_pons, seed=0):
+    t_uds = _t_uds(n_total)
+    clients = [
+        ClientProfile(client_id=i, t_ud=float(t_uds[i]), t_dl=0.0,
+                      m_ud_bits=M_BITS)
+        for i in range(n_total)
+    ]
+    wl = FLRoundWorkload(clients=clients, model_bits=M_BITS)
+    return SweepCase(workload=wl, load=LOAD, policy=POLICY, seed=seed,
+                     topology=MultiPonTopology(n_pons=n_pons))
+
+
+def run_stacked(n_total, n_pons, seed=0):
+    cfg = _pon_cfg(n_total, n_pons)
+    case = _stacked_case(n_total, n_pons, seed)
+    t0 = time.time()
+    res = simulate_round_sweep(cfg, [case])[0]
+    return time.time() - t0, res
+
+
+def run_per_pon_loop(n_total, n_pons, seed=0):
+    """The pre-stacking alternative: one single-PON engine call per
+    wavelength segment, segment clients remapped to a standalone PON."""
+    cfg = _pon_cfg(n_total, n_pons)
+    n_local = cfg.n_onus
+    t_uds = _t_uds(n_total)
+    t0 = time.time()
+    sync = 0.0
+    for p in range(n_pons):
+        ids = range(p * n_local, (p + 1) * n_local)
+        clients = [
+            ClientProfile(client_id=i - p * n_local,
+                          t_ud=float(t_uds[i]), t_dl=0.0,
+                          m_ud_bits=M_BITS)
+            for i in ids
+        ]
+        wl = FLRoundWorkload(clients=clients, model_bits=M_BITS)
+        r = simulate_round_sweep(
+            cfg,
+            [SweepCase(workload=wl, load=LOAD, policy=POLICY, seed=seed)],
+        )[0]
+        sync = max(sync, r.sync_time)
+    return time.time() - t0, sync
+
+
+def run_reference_loop(n_total, n_pons, seed=0):
+    """The parity oracle: per-PON dict-simulator loop + CPS post-pass,
+    on the identical pon-keyed counter streams."""
+    cfg = _pon_cfg(n_total, n_pons)
+    case = _stacked_case(n_total, n_pons, seed)
+    t0 = time.time()
+    res = simulate_multi_pon_round(
+        cfg, case.topology, case.workload, case.load, case.policy,
+        seed=seed,
+    )
+    return time.time() - t0, res
+
+
+def measure_cell(n_total, n_pons, with_loop: bool,
+                 with_ref_loop: bool = False) -> dict:
+    wall, res = run_stacked(n_total, n_pons)
+    cell = {
+        "n_onus": n_total,
+        "n_pons": n_pons,
+        "onus_per_pon": n_total // n_pons,
+        "stacked_wall_s": wall,
+        "rounds_per_sec": 1.0 / wall,
+        "sync_s": res.sync_time,
+    }
+    if with_loop:
+        loop_wall, loop_sync = run_per_pon_loop(n_total, n_pons)
+        cell["loop_wall_s"] = loop_wall
+        cell["speedup_vs_loop"] = loop_wall / wall
+        # different (pon-keyed vs pon-0) streams: statistical agreement
+        assert abs(loop_sync - res.sync_time) / res.sync_time < 0.10, (
+            f"stacked sync {res.sync_time} vs loop sync {loop_sync}"
+        )
+    if with_ref_loop:
+        ref_wall, ref = run_reference_loop(n_total, n_pons)
+        cell["ref_loop_wall_s"] = ref_wall
+        cell["speedup_vs_ref_loop"] = ref_wall / wall
+        # identical streams: the oracle must agree to the float
+        assert abs(ref.sync_time - res.sync_time) <= (
+            1e-6 * res.sync_time
+        ), f"stacked sync {res.sync_time} vs oracle {ref.sync_time}"
+    return cell
+
+
+def cps_contention_demo(n_total=256, n_pons=4, provisioning=0.9) -> dict:
+    """Sync-time shift when the shared CPS uplink actually binds: the
+    same workload under an uncontended vs a 90%-provisioned CPS (still
+    above the ~80% sustained offered load, so the queues stay stable
+    and the CPS binds only on the bursts and the FL upload wave)."""
+    cfg = _pon_cfg(n_total, n_pons)
+    case = _stacked_case(n_total, n_pons)
+    free = simulate_round_sweep(cfg, [case])[0]
+    tight_rate = provisioning * n_pons * cfg.line_rate_bps
+    tight_topo = MultiPonTopology(n_pons=n_pons, cps_rate_bps=tight_rate)
+    tight = simulate_round_sweep(
+        cfg, [SweepCase(workload=case.workload, load=LOAD, policy=POLICY,
+                        seed=case.seed, topology=tight_topo)],
+    )[0]
+    return {
+        "n_onus": n_total,
+        "n_pons": n_pons,
+        "cps_provisioning": provisioning,
+        "sync_uncontended_s": free.sync_time,
+        "sync_contended_s": tight.sync_time,
+        "sync_stretch": tight.sync_time / free.sync_time,
+    }
+
+
+def measure(full: bool = False) -> dict:
+    # warm allocators, jit caches and sampler LUTs
+    simulate_round_sweep(_pon_cfg(64, 2), [_stacked_case(64, 2)])
+    cells = [measure_cell(*FAST_CELL, with_loop=True,
+                          with_ref_loop=True)]
+    if full:
+        for n, p in FULL_GRID:
+            # both loop baselines at 4096 — the acceptance cells; the
+            # reference loop (minutes) only at the headline 32-PON cell
+            cells.append(measure_cell(
+                n, p, with_loop=(n == 4096),
+                with_ref_loop=(n == 4096 and p == 32),
+            ))
+    return {
+        "benchmark": "multi_pon_stacked_vs_per_pon_loop",
+        "load": LOAD,
+        "policy": POLICY,
+        "m_ud_bits": M_BITS,
+        "cells": cells,
+        "cps_demo": cps_contention_demo(),
+    }
+
+
+def run() -> list:
+    m = measure(full=False)
+    rows = []
+    for cell in m["cells"]:
+        # the (256, 4) cell's engine-loop speedup (~1.2x) is too close
+        # to 1 to gate at a 25% threshold without flakes, so only
+        # rounds/sec and the (machine-ratio, noise-robust) reference-
+        # loop speedup become gated tokens
+        derived = (
+            f"rounds_per_sec={cell['rounds_per_sec']:.3f} "
+            f"sync_s={cell['sync_s']:.2f} "
+            f"loop_x{cell.get('speedup_vs_loop', 0.0):.2f}"
+        )
+        if "speedup_vs_ref_loop" in cell:
+            derived += (
+                f" speedup_vs_ref_loop="
+                f"{cell['speedup_vs_ref_loop']:.1f}x"
+            )
+        rows.append({
+            "name": (f"multi_pon_round_n{cell['n_onus']}"
+                     f"_p{cell['n_pons']}"),
+            "us_per_call": cell["stacked_wall_s"] * 1e6,
+            "derived": derived,
+        })
+    demo = m["cps_demo"]
+    rows.append({
+        "name": "multi_pon_cps_contention",
+        "us_per_call": 0.0,
+        "derived": f"sync_stretch={demo['sync_stretch']:.3f}",
+    })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="measure the full 1024-4096 x 8-32 grid")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement payload as JSON")
+    args = ap.parse_args()
+    m = measure(full=args.full)
+    print(json.dumps(m, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(m, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ def collect_modules(tier: str):
         bs_micro,
         fig2a_accuracy,
         fig2b_sync_time,
+        multi_pon,
         net_engine,
         roofline_report,
         timeline,
@@ -38,6 +39,7 @@ def collect_modules(tier: str):
         ("fig2b_sync_time", fig2b_sync_time),
         ("training_time_saving", training_time_saving),
         ("net_engine", net_engine),
+        ("multi_pon", multi_pon),
         ("timeline", timeline),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.slicing import ClientProfile
 from repro.net.engine import SweepCase, simulate_round_sweep
+from repro.net.multi_pon import MultiPonTopology
 from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
 from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
 from repro.fl.server import CPSServer
@@ -39,6 +40,10 @@ class CoSimConfig:
     upload_bits: Optional[float] = None  # per-client M_i^UD; None = model_bits
     pon: PONConfig = field(default_factory=PONConfig)
     timing_seeds: int = 2           # average the net-sim over this many seeds
+    # several wavelength/OLT segments sharing a CPS uplink: ``pon``
+    # then describes ONE segment and clients spread across
+    # n_pons * pon.n_onus ONUs (None = single PON)
+    topology: Optional[MultiPonTopology] = None
 
     @classmethod
     def from_fed_model(cls, model_cfg, compress: str = "int8", **kw):
@@ -90,6 +95,7 @@ class FLNetworkCoSim:
         key = (
             self.cfg.policy,
             round(self.cfg.total_load, 6),
+            self.cfg.topology,
             tuple(sorted((c.client_id, round(c.t_ud, 6), c.m_ud_bits)
                          for c in clients)),
         )
@@ -102,7 +108,8 @@ class FLNetworkCoSim:
                 self.cfg.pon,
                 [
                     SweepCase(workload=wl, load=self.cfg.total_load,
-                              policy=self.cfg.policy, seed=s)
+                              policy=self.cfg.policy, seed=s,
+                              topology=self.cfg.topology)
                     for s in range(self.cfg.timing_seeds)
                 ],
             )
@@ -161,7 +168,8 @@ class FLNetworkCoSim:
         results = simulate_timeline_sweep(
             self.cfg.pon,
             [SweepCase(workload=wl, load=self.cfg.total_load,
-                       policy=self.cfg.policy, seed=s)
+                       policy=self.cfg.policy, seed=s,
+                       topology=self.cfg.topology)
              for s in range(self.cfg.timing_seeds)],
             schedule,
         )

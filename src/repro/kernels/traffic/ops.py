@@ -33,16 +33,30 @@ _MASK32 = 0xFFFFFFFF
 _ROTS = _ref._ROTS
 
 
-def make_stream_key(seed: int, phase: int, round_index: int = 0) -> np.ndarray:
-    """uint32 ``(2,)`` key for one case's (phase, round) arrival stream.
+# Weyl constants mixing the PON index into a stream key (murmur3 c1/c2;
+# deliberately distinct from ref.KEY_WEYL_* so a pon-shifted stream can
+# never alias another stream's per-draw derived keys).
+_PON_WEYL_0 = 0xCC9E2D51
+_PON_WEYL_1 = 0x1B873593
 
-    ``seed`` fills one key word, ``(phase, round)`` the other; threefry
-    does the mixing. Distinct (seed, phase, round) triples therefore get
-    independent streams, and a stream's values depend on nothing else —
-    the O(1)-seek contract.
+
+def make_stream_key(seed: int, phase: int, round_index: int = 0,
+                    pon: int = 0) -> np.ndarray:
+    """uint32 ``(2,)`` key for one case's (phase, round, pon) stream.
+
+    ``seed`` fills one key word, ``(phase, round)`` the other, and the
+    PON index Weyl-shifts both words; threefry does the mixing.
+    Distinct (seed, phase, round, pon) tuples therefore get independent
+    streams, and a stream's values depend on nothing else — the
+    O(1)-seek contract. ``pon=0`` reproduces the pre-multi-PON key
+    bit-for-bit (pinned by the stream regressions).
     """
     return np.array(
-        [seed & _MASK32, (phase + 2 * round_index) & _MASK32], np.uint32
+        [
+            (seed + pon * _PON_WEYL_0) & _MASK32,
+            (phase + 2 * round_index + pon * _PON_WEYL_1) & _MASK32,
+        ],
+        np.uint32,
     )
 
 

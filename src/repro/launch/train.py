@@ -27,6 +27,7 @@ from repro.data import TokenBatcher, lm_tokens
 from repro.dist import stepfns
 from repro.launch.mesh import make_host_mesh
 from repro.net.engine import SweepCase
+from repro.net.multi_pon import MultiPonTopology
 from repro.net.sim import FLRoundWorkload, PONConfig
 from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
 from repro.optim.optimizers import OptimizerConfig
@@ -48,6 +49,8 @@ def train(
     compress: str = "int8",
     log_every: int = 10,
     config_overrides: Optional[dict] = None,
+    n_pons: int = 1,
+    cps_gbps: Optional[float] = None,
 ):
     cfg = get_config(arch, smoke=smoke).replace(grad_accum=1)
     if config_overrides:
@@ -108,14 +111,30 @@ def train(
                           m_ud_bits=up_bits)
             for i, t in enumerate(rng.uniform(1.0, 5.0, max(pods, 2)))
         ]
-        pon = PONConfig(n_onus=max(8, pods))
+        # several OLT/wavelength segments sharing a CPS uplink: the PON
+        # config describes ONE segment. Client i sits on global ONU
+        # i % (n_pons * n_onus) with PON = onu // n_onus, so spreading
+        # the pods over the stack needs n_onus = ceil(pods / n_pons)
+        # exactly (any larger floor would cluster them on PON 0).
+        n_clients = max(pods, 2)
+        if n_pons > 1:
+            pon = PONConfig(n_onus=max(1, -(-n_clients // n_pons)))
+        else:
+            pon = PONConfig(n_onus=max(8, n_clients))
+        topology = None
+        if n_pons > 1 or cps_gbps is not None:
+            topology = MultiPonTopology(
+                n_pons=n_pons,
+                cps_rate_bps=None if cps_gbps is None else cps_gbps * 1e9,
+            )
         # one stacked multi-round timeline provides every round's sync
         # time (per-round arrival streams, not one number reused R times)
         wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
         n_net_rounds = max(rounds - start_round, 1)
         timeline = simulate_timeline_sweep(
             pon,
-            [SweepCase(workload=wl, load=load, policy=policy, seed=0)],
+            [SweepCase(workload=wl, load=load, policy=policy, seed=0,
+                       topology=topology)],
             TimelineSchedule(n_rounds=n_net_rounds),
         )[0]
         sync_times = timeline.sync_times
@@ -180,12 +199,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--policy", choices=("bs", "fcfs"), default="bs")
     ap.add_argument("--load", type=float, default=0.8)
+    ap.add_argument("--pons", type=int, default=1,
+                    help="wavelength/OLT segments sharing the CPS uplink")
+    ap.add_argument("--cps-gbps", type=float, default=None,
+                    help="CPS uplink rate in Gb/s (default uncontended)")
     args = ap.parse_args(argv)
     train(
         arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
         rounds=args.rounds, n_pods=args.pods, global_batch=args.batch,
         seq_len=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
         policy=args.policy, load=args.load,
+        n_pons=args.pons, cps_gbps=args.cps_gbps,
     )
 
 

@@ -3,6 +3,12 @@ from repro.net.engine import (  # noqa: F401
     SweepCase,
     simulate_round_sweep,
 )
+from repro.net.multi_pon import (  # noqa: F401
+    MultiPonTopology,
+    cps_waterfill,
+    pon_bg_rates,
+    simulate_multi_pon_round,
+)
 from repro.net.timeline import (  # noqa: F401
     TimelineResult,
     TimelineRound,

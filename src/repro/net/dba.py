@@ -118,9 +118,15 @@ class FCFSBestEffort:
         self.capacity_bits = line_rate_bps * cycle_time_s * efficiency
         self.n_onus = n_onus
 
-    def grant(self, queues: Sequence[OnuQueue]) -> Dict[int, Dict[str, float]]:
+    def grant(
+        self, queues: Sequence[OnuQueue], cap_bits: Optional[float] = None
+    ) -> Dict[int, Dict[str, float]]:
+        """``cap_bits`` caps this cycle below the wavelength capacity —
+        the PON's waterfilled share of a shared CPS uplink."""
         grants: Dict[int, Dict[str, float]] = {}
         cap = self.capacity_bits
+        if cap_bits is not None:
+            cap = min(cap, cap_bits)
 
         # 1) assured class: background backlogs, oldest first
         bg_q = [(q.hol_time_of("bg"), q) for q in queues if q.backlog_of("bg") > 0]
@@ -180,15 +186,21 @@ class SlicedDBA:
         ]
 
     def grant(
-        self, queues: Sequence[OnuQueue], t_cycle: float
+        self, queues: Sequence[OnuQueue], t_cycle: float,
+        cap_bits: Optional[float] = None,
     ) -> Dict[int, Dict[str, float]]:
         """Returns {onu_id: {"fl": bits, "bg": bits}} for this cycle.
 
         FL rides ONLY in its slice slots (dedicated T-CONT); background is
-        assured from the remaining capacity.
+        assured from the remaining capacity. ``cap_bits`` caps the cycle
+        below the wavelength capacity (the PON's waterfilled share of a
+        shared CPS uplink).
         """
         grants: Dict[int, Dict[str, float]] = {}
         by_id = {q.onu_id: q for q in queues}
+        cap_total = self.capacity_bits
+        if cap_bits is not None:
+            cap_total = min(cap_total, cap_bits)
         reserved_spent = 0.0
         for slot in self.active_slots(t_cycle):
             q = by_id.get(slot.client_id)
@@ -200,14 +212,14 @@ class SlicedDBA:
             fl_bits = min(
                 self.slice_rate * max(overlap, 0.0),
                 q.backlog_of("fl"),
-                self.capacity_bits - reserved_spent,
+                cap_total - reserved_spent,
             )
             if fl_bits > 0:
                 g = grants.setdefault(slot.client_id, {})
                 g["fl"] = g.get("fl", 0.0) + fl_bits
                 reserved_spent += fl_bits
         # assured background from the remaining capacity, oldest first
-        cap = self.capacity_bits - reserved_spent
+        cap = cap_total - reserved_spent
         bg_q = [
             (q.hol_time_of("bg"), q) for q in queues if q.backlog_of("bg") > 0
         ]

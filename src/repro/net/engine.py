@@ -6,7 +6,10 @@ dicts and per-cycle ``sorted()`` calls over ``OnuQueue`` segment lists; a
 sweep takes minutes.  This module keeps that simulator as the semantic
 reference and re-expresses one cycle as a handful of array operations
 over *all* ONUs at once, with a batch axis over sweep cases
-(seed x load x policy):
+(seed x load x policy) — and, under a ``MultiPonTopology``, over the
+cases' wavelength segments too: rows become flattened ``(case, pon)``
+pairs over per-PON ONU columns, coupled each cycle by the CPS
+waterfill (``repro.net.multi_pon``):
 
 * queue backlogs are ``(n_cases, n_onus)`` float arrays; FL queues are
   tracked per client in a static ``(onu, client_id)``-sorted layout so
@@ -36,6 +39,11 @@ import numpy as np
 
 from repro.core.scheduler import schedule_slots, slots_to_arrays
 from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
+from repro.net.multi_pon import (
+    MultiPonTopology,
+    cps_waterfill,
+    pon_bg_rates,
+)
 from repro.net.traffic import (
     PACKET_BITS,
     background_rate_for_load,
@@ -55,8 +63,9 @@ class SweepCase:
     ``dl_arrivals``/``ul_arrivals`` optionally inject a precomputed
     per-cycle background arrival matrix ``(n_cycles, n_onus)`` (bits) for
     each phase — the parity-test hook; cycles beyond the matrix see zero
-    arrivals.  When absent, arrivals come from the case's counter-based
-    Poisson-burst stream keyed by ``(seed, phase, stream_round)``
+    arrivals (columns are global ONUs — ``n_pons * n_onus`` wide under a
+    topology).  When absent, arrivals come from the case's counter-based
+    Poisson-burst stream keyed by ``(seed, phase, stream_round, pon)``
     (``repro.kernels.traffic``) — identical regardless of chunking and
     O(1)-seekable, so a multi-round timeline can address round
     ``stream_round``'s arrivals directly.
@@ -64,6 +73,11 @@ class SweepCase:
     ``no_dl_ids`` lists clients that skip the model download (their
     ``dl_done`` is 0.0): the multi-round timeline's deadline carriers,
     which resume a partial upload instead of fetching a fresh model.
+
+    ``topology`` stacks the case over several wavelength/OLT segments
+    sharing a CPS uplink (``repro.net.multi_pon.MultiPonTopology``);
+    every case of a sweep must share one topology. ``None`` is the
+    single-PON network described by the ``PONConfig`` alone.
     """
 
     workload: "FLRoundWorkload"  # noqa: F821  (imported lazily, no cycle)
@@ -74,57 +88,84 @@ class SweepCase:
     ul_arrivals: Optional[np.ndarray] = None
     stream_round: int = 0
     no_dl_ids: frozenset = frozenset()
+    topology: Optional[MultiPonTopology] = None
 
 
 # ---------------------------------------------------------------------------
-# client layout: union of all cases' clients, sorted by (onu, client_id)
+# client layout: (local_onu, slot) columns, per-PON client bindings
 # ---------------------------------------------------------------------------
 
 
 class _Layout:
-    """Static client layout shared by every case of a sweep.
+    """Static slot layout shared by every row of a sweep.
 
-    Clients are keyed by ``client_id`` (onu = id % n_onus) and laid out
-    sorted by ``(onu, client_id)`` so per-ONU reductions are contiguous
-    ``reduceat`` segments and the settle order (ascending client_id
-    within an ONU) is the layout order.
+    Rows are flattened ``(case, pon)`` pairs (case-major); columns are
+    ``(local_onu, slot)`` pairs, ascending, where ONU ``o`` carries
+    ``max_p |clients on (p, o)|`` slots — so per-ONU reductions are
+    contiguous ``reduceat`` segments shared by every row, while each
+    row binds its own PON's clients to the slots (``cid_of[p, col]``;
+    a column is dead — ``part`` False — in rows whose PON or case
+    doesn't bind it).  Slots within an ONU are bound in ascending
+    ``client_id`` order, so the settle order (ascending id within an
+    ONU) is the column order, exactly the PR 2 single-PON layout when
+    ``n_pons == 1``.  Column count is the *per-PON maximum*, not the
+    client union — a 32-PON stack of 4 096 clients keeps ~128 columns
+    per row instead of 4 096, which is what makes stacking win over a
+    per-PON loop.
+
+    Client placement: global onu = id % (n_pons * n_onus); PON =
+    onu // n_onus, local onu = onu % n_onus.
     """
 
-    def __init__(self, cases: Sequence[SweepCase], n_onus: int):
+    def __init__(self, cases: Sequence[SweepCase], n_onus: int,
+                 n_pons: int = 1):
+        total = n_onus * n_pons
         ids = sorted(
             {c.client_id for case in cases for c in case.workload.clients}
         )
         if not ids:
             raise ValueError("sweep needs at least one client")
-        ids.sort(key=lambda i: (i % n_onus, i))
-        self.ids = np.asarray(ids, np.int64)
-        self.onu = self.ids % n_onus
-        self.n_clients = len(ids)
-        self.pos = np.arange(self.n_clients, dtype=np.int64)
+        buckets: Dict[tuple, List[int]] = {}
+        for i in ids:                       # ascending id within buckets
+            o = i % total
+            buckets.setdefault((o // n_onus, o % n_onus), []).append(i)
+        slots = np.zeros(n_onus, np.int64)
+        for (_, o), lst in buckets.items():
+            slots[o] = max(slots[o], len(lst))
+        self.onu = np.repeat(np.arange(n_onus, dtype=np.int64), slots)
+        slot_off = np.zeros(n_onus + 1, np.int64)
+        np.cumsum(slots, out=slot_off[1:])
+        nU = self.n_clients = int(slot_off[-1])
+        self.pos = np.arange(nU, dtype=np.int64)
+        # per-PON slot binding: which client id a column carries
+        self.cid_of = np.full((n_pons, nU), -1, np.int64)
+        colmap: Dict[int, int] = {}
+        for (p, o), lst in buckets.items():
+            for s, cid in enumerate(lst):
+                col = int(slot_off[o]) + s
+                self.cid_of[p, col] = cid
+                colmap[cid] = col
         starts = [0] + [
-            j for j in range(1, self.n_clients)
-            if self.onu[j] != self.onu[j - 1]
+            j for j in range(1, nU) if self.onu[j] != self.onu[j - 1]
         ]
         self.seg_starts = np.asarray(starts, np.int64)
         self.seg_onus = self.onu[self.seg_starts]
-        self.seg_len = np.diff(
-            np.append(self.seg_starts, self.n_clients)
-        )
+        self.seg_len = np.diff(np.append(self.seg_starts, nU))
         self.single = bool(self.seg_len.max() == 1)
-        # one client per ONU in ONU order: per-ONU aggregates are the
-        # client arrays themselves (no scatter, no allocation)
-        self.identity = self.single and self.n_clients == n_onus and bool(
+        # one slot per ONU in ONU order: per-ONU aggregates are the
+        # column arrays themselves (no scatter, no allocation)
+        self.identity = self.single and nU == n_onus and bool(
             (self.onu == np.arange(n_onus)).all()
         )
 
         B = len(cases)
-        nU = self.n_clients
-        idx = {cid: j for j, cid in enumerate(ids)}
-        self.part = np.zeros((B, nU), bool)
-        self.t_ud = np.zeros((B, nU))
-        self.m_ud = np.zeros((B, nU))
-        self.dist = np.full((B, nU), 20_000.0)
-        self.list_pos = np.zeros((B, nU), np.int64)
+        R = B * n_pons
+        self.n_pons = n_pons
+        self.part = np.zeros((R, nU), bool)
+        self.t_ud = np.zeros((R, nU))
+        self.m_ud = np.zeros((R, nU))
+        self.dist = np.full((R, nU), 20_000.0)
+        self.list_pos = np.zeros((R, nU), np.int64)
         for b, case in enumerate(cases):
             seen = set()
             for p, c in enumerate(case.workload.clients):
@@ -133,15 +174,17 @@ class _Layout:
                         f"duplicate client_id {c.client_id} in case {b}"
                     )
                 seen.add(c.client_id)
-                j = idx[c.client_id]
-                self.part[b, j] = True
-                self.t_ud[b, j] = c.t_ud
-                self.m_ud[b, j] = c.m_ud_bits
-                self.dist[b, j] = c.distance_m
-                self.list_pos[b, j] = p
+                o = c.client_id % total
+                r = b * n_pons + o // n_onus
+                j = colmap[c.client_id]
+                self.part[r, j] = True
+                self.t_ud[r, j] = c.t_ud
+                self.m_ud[r, j] = c.m_ud_bits
+                self.dist[r, j] = c.distance_m
+                self.list_pos[r, j] = p
 
     def rows(self, sel: np.ndarray) -> "_Layout":
-        """Row-sliced view for a sub-batch of cases (columns shared)."""
+        """Row-sliced view for a sub-batch of rows (columns shared)."""
         sub = object.__new__(_Layout)
         sub.__dict__.update(self.__dict__)
         for name in ("part", "t_ud", "m_ud", "dist", "list_pos"):
@@ -535,9 +578,11 @@ def _credit(rem, done, done_t, drained, t_done: float):
 
 
 def _slot_grants(slot_arrays, backlog_onu, t: float, cyc: float,
-                 cap: float, n_onus: int) -> np.ndarray:
+                 cap: np.ndarray, n_onus: int) -> np.ndarray:
     """SlicedDBA slot grants: overlap * slice rate, capped by the FL
-    backlog and the (sequentially spent) cycle capacity."""
+    backlog and the (sequentially spent) per-row cycle capacity
+    ``cap`` — the wavelength capacity, or the row's waterfilled CPS
+    share."""
     ts, te, onu_idx, rate, valid = slot_arrays
     B, S = ts.shape
     te_g = te + cyc
@@ -550,7 +595,9 @@ def _slot_grants(slot_arrays, backlog_onu, t: float, cyc: float,
     want = np.minimum(want, backlog_onu[bidx, onu_idx])
     want = np.where(active & (want > 0.0), want, 0.0)
     prefix = np.cumsum(want, axis=1)
-    grants = np.minimum(want, np.maximum(cap - (prefix - want), 0.0))
+    grants = np.minimum(
+        want, np.maximum(cap[:, None] - (prefix - want), 0.0)
+    )
     out = np.zeros((B, n_onus))
     np.add.at(out, (np.broadcast_to(bidx, (B, S)), onu_idx), grants)
     return out
@@ -563,8 +610,16 @@ def _slot_grants(slot_arrays, backlog_onu, t: float, cyc: float,
 
 def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                stream: Optional[_Stream], mode: str, slot_arrays=None,
-               max_t: float = 600.0, fill_unfinished: bool = True):
-    """One transfer phase for a (policy-homogeneous) batch of cases.
+               max_t: float = 600.0, fill_unfinished: bool = True,
+               cap_row: Optional[np.ndarray] = None,
+               cps_cap: Optional[float] = None, n_pons: int = 1):
+    """One transfer phase for a (policy-homogeneous) batch of rows.
+
+    Rows are ``(case, pon)`` pairs (case-major); ``cap_row`` is each
+    row's wavelength cycle capacity and ``cps_cap`` the per-cycle CPS
+    budget shared by the ``n_pons`` consecutive rows of one case —
+    when set, each cycle first waterfills the CPS capacity across a
+    case's per-PON demands and every row allocates within its share.
 
     Returns ``(done_t, rem)``: per-client completion times
     ``(B, n_clients)`` (NaN for clients not in a case's workload) and
@@ -579,9 +634,10 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     B = rem_init.shape[0]
     N = cfg.n_onus
     cyc = cfg.cycle_time_s
-    cap = cfg.line_rate_bps * cyc * cfg.efficiency
     prop = cfg.propagation_s
-    cap_col = np.full((B,), cap)
+    if cap_row is None:
+        cap_row = np.full((B,), cfg.line_rate_bps * cyc * cfg.efficiency)
+    cap_col = cap_row
 
     rem = rem_init.copy()
     done = ~lay.part | (rem <= 0.0)
@@ -617,14 +673,33 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
         if n_left > n_wait:
             backlog_onu = fl.backlog_per_onu()
             if mode == "fcfs":
-                bg_grants = _waterfill(bg.backlog, bg.hol_key, cap_col)
-                cap_fl = cap_col - bg_grants.sum(axis=1)
+                if cps_cap is None:
+                    eff = cap_col
+                else:
+                    want = np.minimum(
+                        bg.backlog.sum(axis=1) + backlog_onu.sum(axis=1),
+                        cap_col,
+                    )
+                    eff = cps_waterfill(
+                        want.reshape(-1, n_pons), cps_cap
+                    ).reshape(-1)
+                bg_grants = _waterfill(bg.backlog, bg.hol_key, eff)
+                cap_fl = eff - bg_grants.sum(axis=1)
                 fl_grants = _waterfill(
                     backlog_onu, fl.hol_per_onu, cap_fl
                 )
             else:
                 fl_grants = _slot_grants(slot_arrays, backlog_onu, t,
-                                         cyc, cap, N)
+                                         cyc, cap_col, N)
+                if cps_cap is not None:
+                    want = fl_grants.sum(axis=1)
+                    eff = cps_waterfill(
+                        want.reshape(-1, n_pons), cps_cap
+                    ).reshape(-1)
+                    if np.any(eff < want):
+                        fl_grants = _slot_grants(
+                            slot_arrays, backlog_onu, t, cyc, eff, N
+                        )
             if use_bg:
                 bg.serve(bg_grants, k)
             if np.any(fl_grants > 0.0):
@@ -635,7 +710,14 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 )
                 n_left = int(np.count_nonzero(~done & lay.part))
         elif use_bg:
-            bg_grants = _waterfill(bg.backlog, bg.hol_key, cap_col)
+            if cps_cap is None:
+                eff = cap_col
+            else:
+                want = np.minimum(bg.backlog.sum(axis=1), cap_col)
+                eff = cps_waterfill(
+                    want.reshape(-1, n_pons), cps_cap
+                ).reshape(-1)
+            bg_grants = _waterfill(bg.backlog, bg.hol_key, eff)
             bg.serve(bg_grants, k)
         t += cyc
         k += 1
@@ -664,42 +746,54 @@ def _case_bg_rate(case: SweepCase, cfg, t_round_hint: float) -> float:
     )
 
 
-def _bs_slice(case: SweepCase, cfg, dl_done: Dict[int, float]):
-    profiles = [
-        ClientProfile(
-            client_id=c.client_id,
-            t_ud=c.t_ud,
-            t_dl=dl_done[c.client_id],
-            m_ud_bits=c.m_ud_bits,
-            distance_m=c.distance_m,
-        )
-        for c in case.workload.clients
-    ]
+def _bs_slice(profiles: List[ClientProfile], capacity_bps: float):
+    """Per-segment slice spec + slot arrays (empty segments allowed —
+    a PON row of a multi-PON case may hold no clients)."""
+    if not profiles:
+        return None, slots_to_arrays([])
     spec = compute_slice(
         profiles, t_current=0.0, t_round=0.0,
-        capacity_bps=cfg.line_rate_bps * cfg.efficiency, h=1,
+        capacity_bps=capacity_bps, h=1,
     )
     slots = schedule_slots(profiles, spec, round_start=0.0)
     return spec, slots_to_arrays(slots)
 
 
-def _stack_slots(per_case, n_onus: int):
-    """Pad per-case slot arrays to a common (B, S) shape."""
-    S = max(len(a["client_id"]) for _, a in per_case)
-    B = len(per_case)
+def _stack_slots(per_row, n_onus: int):
+    """Pad per-row slot arrays to a common (B, S) shape."""
+    S = max(
+        (len(a["client_id"]) for _, a in per_row), default=0
+    ) or 1
+    B = len(per_row)
     ts = np.full((B, S), np.inf)
     te = np.full((B, S), -np.inf)
     onu = np.zeros((B, S), np.int64)
     rate = np.zeros((B, 1))
     valid = np.zeros((B, S), bool)
-    for b, (spec, a) in enumerate(per_case):
+    for b, (spec, a) in enumerate(per_row):
         s = len(a["client_id"])
-        ts[b, :s] = a["t_start"]
-        te[b, :s] = a["t_end"]
-        onu[b, :s] = a["client_id"] % n_onus
-        valid[b, :s] = True
-        rate[b, 0] = spec.bandwidth_bps
+        if s:
+            ts[b, :s] = a["t_start"]
+            te[b, :s] = a["t_end"]
+            onu[b, :s] = a["client_id"] % n_onus
+            valid[b, :s] = True
+        if spec is not None:
+            rate[b, 0] = spec.bandwidth_bps
     return ts, te, onu, rate, valid
+
+
+def _sweep_topology(cases: Sequence[SweepCase]) -> MultiPonTopology:
+    """The one topology shared by every case (None ≡ trivial)."""
+    topos = {case.topology for case in cases}
+    topos.discard(None)
+    if len(topos) > 1:
+        raise ValueError("sweep cases must share one MultiPonTopology")
+    if not topos:
+        return MultiPonTopology()
+    topo = topos.pop()
+    if any(case.topology is None for case in cases) and not topo.trivial:
+        raise ValueError("sweep cases must share one MultiPonTopology")
+    return topo
 
 
 def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
@@ -712,8 +806,17 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     Semantics match ``repro.net.sim.simulate_round``'s reference
     implementation per case (property-tested); both backends consume the
     same counter-based arrival stream keyed by (seed, phase,
-    stream_round), so seeded results agree across backends and batch
-    compositions unless arrivals are injected.
+    stream_round, pon), so seeded results agree across backends and
+    batch compositions unless arrivals are injected.
+
+    A shared ``SweepCase.topology`` stacks every case over its
+    ``n_pons`` wavelength segments: the simulation rows become
+    ``(case, pon)`` pairs over per-PON ONU columns, each row under its
+    own wavelength capacity, coupled per cycle by the CPS waterfill
+    (``repro.net.multi_pon``) when the topology carries a CPS rate.
+    With injected arrival matrices the columns are global ONUs
+    (``n_pons * cfg.n_onus`` wide) and each row replays its own PON's
+    slice.
 
     ``ul_deadline_s`` cuts the upload phase at a round deadline: clients
     still transmitting then keep their unserved bits in the result's
@@ -723,83 +826,109 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     from repro.net.sim import RoundResult  # lazy: sim imports us lazily
 
     cases = list(cases)
+    topo = _sweep_topology(cases)
+    P = topo.n_pons
+    n_local = cfg.n_onus
+    total_onus = P * n_local
     for case in cases:
         if case.policy not in ("fcfs", "bs"):
             raise ValueError(f"unknown policy {case.policy!r}")
         if case.policy == "bs":
             bad = [c.client_id for c in case.workload.clients
-                   if c.client_id >= cfg.n_onus]
+                   if c.client_id >= total_onus]
             if bad:
                 raise ValueError(
-                    f"bs policy requires client_id < n_onus; got {bad}"
+                    "bs policy requires client_id < n_onus * n_pons; "
+                    f"got {bad}"
                 )
-    lay = _Layout(cases, cfg.n_onus)
+    lay = _Layout(cases, n_local, P)
     B = len(cases)
-    per_onu_rate = np.array(
-        [_case_bg_rate(c, cfg, t_round_hint) / cfg.n_onus for c in cases]
-    )
+    R = B * P
+    row_case = np.repeat(np.arange(B), P)
+    row_pon = np.tile(np.arange(P), B)
+    rates_pon = topo.rates(cfg)
+    cap_row = np.tile(topo.capacity_bits(cfg), B)
+    cps_cap = topo.cps_capacity_bits(cfg)
+    per_onu_rate = np.stack([
+        pon_bg_rates(c.workload.clients, c.workload.model_bits, c.load,
+                     cfg, topo, t_round_hint)
+        for c in cases
+    ])                                                  # (B, n_pons)
     ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
-    no_dl = np.zeros((B, lay.n_clients), bool)
+    no_dl = np.zeros((R, lay.n_clients), bool)
     for b, case in enumerate(cases):
         if case.no_dl_ids:
-            no_dl[b] = np.isin(lay.ids, list(case.no_dl_ids))
+            skip = list(case.no_dl_ids)
+            for p in range(P):
+                no_dl[b * P + p] = np.isin(lay.cid_of[p], skip)
     no_dl &= lay.part
 
     def providers(sel, phase):
         from repro.kernels.traffic.ops import make_stream_key
 
         entries = []
-        for b in sel:
+        for r in sel:
+            b, p = int(row_case[r]), int(row_pon[r])
             case = cases[b]
             injected = (case.dl_arrivals if phase == "dl"
                         else case.ul_arrivals)
             if injected is not None:
-                entries.append(_CaseFixed(injected, cfg.n_onus))
+                if P > 1:
+                    arr = np.asarray(injected, np.float64)
+                    if arr.ndim != 2 or arr.shape[1] != total_onus:
+                        raise ValueError(
+                            f"arrivals must be (n_cycles, {total_onus})"
+                        )
+                    injected = arr[:, p * n_local:(p + 1) * n_local]
+                entries.append(_CaseFixed(injected, n_local))
             else:
                 entries.append((
                     make_stream_key(case.seed, 0 if phase == "dl" else 1,
-                                    case.stream_round),
-                    burst_lambda(per_onu_rate[b], cfg.cycle_time_s,
+                                    case.stream_round, p),
+                    burst_lambda(per_onu_rate[b, p], cfg.cycle_time_s,
                                  PACKET_BITS, cfg.bg_burst_packets),
                 ))
-        return _Stream(entries, cfg.n_onus,
-                       1.0 / cfg.bg_burst_packets)
+        return _Stream(entries, n_local, 1.0 / cfg.bg_burst_packets)
 
     # ---- downstream ------------------------------------------------------
-    dl_done = np.full((B, lay.n_clients), np.nan)
+    dl_done = np.full((R, lay.n_clients), np.nan)
     fcfs_rows = np.array(
-        [b for b, c in enumerate(cases) if c.policy == "fcfs"], np.int64
+        [r for r in range(R) if cases[row_case[r]].policy == "fcfs"],
+        np.int64,
     )
     bs_rows = np.array(
-        [b for b, c in enumerate(cases) if c.policy == "bs"], np.int64
+        [r for r in range(R) if cases[row_case[r]].policy == "bs"],
+        np.int64,
     )
     if len(fcfs_rows):
         sub = lay.rows(fcfs_rows)
         rem0 = np.where(
             sub.part & ~no_dl[fcfs_rows],
-            np.array([cases[b].workload.model_bits for b in fcfs_rows]
-                     )[:, None],
+            np.array([cases[row_case[r]].workload.model_bits
+                      for r in fcfs_rows])[:, None],
             0.0,
         )
         ready0 = np.zeros_like(rem0)
         dl_done[fcfs_rows], _ = _run_phase(
             cfg, sub, rem0, ready0, providers(fcfs_rows, "dl"), "fcfs",
-            max_t=max_t,
+            max_t=max_t, cap_row=cap_row[fcfs_rows], cps_cap=cps_cap,
+            n_pons=P,
         )
-    for b in bs_rows:
+    for r in bs_rows:
+        b, p = int(row_case[r]), int(row_pon[r])
         t_bcast = (
             cases[b].workload.model_bits
-            / (cfg.line_rate_bps * cfg.efficiency)
+            / (rates_pon[p] * cfg.efficiency)
             + cfg.propagation_s
         )
-        dl_done[b] = np.where(lay.part[b], t_bcast, np.nan)
+        dl_done[r] = np.where(lay.part[r], t_bcast, np.nan)
     dl_done = np.where(no_dl, 0.0, dl_done)
 
     ready_t = dl_done + lay.t_ud
 
     # ---- upstream --------------------------------------------------------
-    ul_done = np.full((B, lay.n_clients), np.nan)
-    ul_rem = np.zeros((B, lay.n_clients))
+    ul_done = np.full((R, lay.n_clients), np.nan)
+    ul_rem = np.zeros((R, lay.n_clients))
     specs: Dict[int, SliceSpec] = {}
     if len(fcfs_rows):
         sub = lay.rows(fcfs_rows)
@@ -808,18 +937,34 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         ul_done[fcfs_rows], ul_rem[fcfs_rows] = _run_phase(
             cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
             max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
+            cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
         )
     if len(bs_rows):
-        per_case = []
-        for b in bs_rows:
+        per_row = []
+        for r in bs_rows:
+            b, p = int(row_case[r]), int(row_pon[r])
             dl_map = {
-                int(lay.ids[j]): float(dl_done[b, j])
-                for j in range(lay.n_clients) if lay.part[b, j]
+                int(lay.cid_of[p, j]): float(dl_done[r, j])
+                for j in range(lay.n_clients) if lay.part[r, j]
             }
-            spec, arrays = _bs_slice(cases[b], cfg, dl_map)
-            specs[int(b)] = spec
-            per_case.append((spec, arrays))
-        slot_arrays = _stack_slots(per_case, cfg.n_onus)
+            profiles = [
+                ClientProfile(
+                    client_id=c.client_id,
+                    t_ud=c.t_ud,
+                    t_dl=dl_map[c.client_id],
+                    m_ud_bits=c.m_ud_bits,
+                    distance_m=c.distance_m,
+                )
+                for c in cases[b].workload.clients
+                if c.client_id in dl_map
+            ]
+            spec, arrays = _bs_slice(
+                profiles, float(rates_pon[p] * cfg.efficiency)
+            )
+            if P == 1:
+                specs[b] = spec
+            per_row.append((spec, arrays))
+        slot_arrays = _stack_slots(per_row, n_local)
         sub = lay.rows(bs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[bs_rows], np.inf)
@@ -827,20 +972,35 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             cfg, sub, rem0, ready, None, "bs",
             slot_arrays=slot_arrays, max_t=ul_max_t,
             fill_unfinished=ul_deadline_s is None,
+            cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,
         )
 
     # ---- assemble --------------------------------------------------------
     results = []
     for b, case in enumerate(cases):
-        sel = lay.part[b]
-        ids = lay.ids[sel]
-        dl = {int(i): float(v) for i, v in zip(ids, dl_done[b, sel])}
-        rd = {int(i): float(v) for i, v in zip(ids, ready_t[b, sel])}
-        ul = {int(i): float(v) for i, v in zip(ids, ul_done[b, sel])}
-        remaining = {
-            int(i): float(v)
-            for i, v in zip(ids, ul_rem[b, sel]) if v > 0.0
-        }
+        dl: Dict[int, float] = {}
+        rd: Dict[int, float] = {}
+        ul: Dict[int, float] = {}
+        remaining: Dict[int, float] = {}
+        for p in range(P):
+            r = b * P + p
+            sel = lay.part[r]
+            if not sel.any():
+                continue
+            ids = lay.cid_of[p][sel]
+            dl.update(
+                (int(i), float(v)) for i, v in zip(ids, dl_done[r, sel])
+            )
+            rd.update(
+                (int(i), float(v)) for i, v in zip(ids, ready_t[r, sel])
+            )
+            ul.update(
+                (int(i), float(v)) for i, v in zip(ids, ul_done[r, sel])
+            )
+            remaining.update(
+                (int(i), float(v))
+                for i, v in zip(ids, ul_rem[r, sel]) if v > 0.0
+            )
         if remaining and ul_deadline_s is not None:
             sync = ul_deadline_s + case.workload.t_aggregate
         else:

@@ -1,0 +1,420 @@
+"""Multi-PON (wavelength-stacked) topology sharing one CPS uplink.
+
+The paper evaluates one OLT with tens of ONUs; the edge-computing
+framing (many OLTs feeding one edge aggregation point) is the
+1000+-ONU regime: ``n_pons`` wavelength/OLT segments, each a full
+TDM-PON with its own cycle capacity and DBA, converge on a
+converged-packet-segment (CPS) link of finite capacity.  Per polling
+cycle the CPS capacity is **waterfilled** across the PONs (max-min
+fair): a PON's cycle demand is what its own DBA would serve under its
+wavelength capacity, and when the PONs' total demand exceeds the CPS
+capacity each PON is granted ``min(demand_p, mu)`` with the water
+level ``mu`` chosen so the grants exactly exhaust the CPS link.
+Within its CPS share a PON allocates as usual (assured background
+oldest-first then best-effort FL under FCFS; reserved slice slots
+under BS — the slice holds CPS priority end to end, so FL stays
+isolated from background load, which is the paper's claim carried up
+one level).
+
+This module holds the topology description (``MultiPonTopology``),
+the shared waterfill kernel (``cps_waterfill`` — the vectorized
+engine and the reference oracle call the *same* function so their
+water levels agree to the float), the per-PON background-rate split
+(``pon_bg_rates``), and the parity oracle
+``simulate_multi_pon_round``: an explicit per-PON cycle loop over
+``OnuQueue`` dict state with a CPS post-pass between the raw DBA
+grants and the serve step.  The stacked engine
+(``repro.net.engine``) must reproduce it at rtol 1e-6
+(property-tested in ``tests/test_multi_pon.py``).
+
+Client placement: client ``i`` lives on global ONU ``i %
+(n_pons * cfg.n_onus)``; PON ``onu // cfg.n_onus``, local ONU ``onu %
+cfg.n_onus``.  With ``n_pons == 1`` this reduces to the single-PON
+``i % n_onus`` map and every quantity here collapses to the PR 2/3
+behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import schedule_slots
+from repro.core.slicing import ClientProfile, compute_slice
+from repro.net.dba import FCFSBestEffort, OnuQueue, SlicedDBA
+from repro.net.sim import RoundResult, _credit
+from repro.net.traffic import (
+    background_rate_for_load,
+    counter_streams_for_pons,
+)
+
+CAP_EPS = 1e-9                    # matches the DBAs' exhaustion threshold
+
+__all__ = [
+    "MultiPonTopology",
+    "cps_waterfill",
+    "pon_bg_rates",
+    "simulate_multi_pon_round",
+]
+
+
+@dataclass(frozen=True)
+class MultiPonTopology:
+    """Several OLT/wavelength segments sharing a CPS uplink.
+
+    ``n_pons`` wavelength segments each serve ``cfg.n_onus`` ONUs at
+    ``cfg.line_rate_bps`` (or a per-PON override via
+    ``pon_rates_bps``).  ``cps_rate_bps`` is the shared CPS link; its
+    per-cycle byte budget is waterfilled across the PONs each polling
+    cycle (``None`` = uncontended, the PONs are independent).  The CPS
+    link carries no PON framing, so its cycle capacity is
+    ``rate * cycle_time`` without the PON efficiency factor.
+    """
+
+    n_pons: int = 1
+    cps_rate_bps: Optional[float] = None
+    pon_rates_bps: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.n_pons < 1:
+            raise ValueError("n_pons must be >= 1")
+        if self.cps_rate_bps is not None and self.cps_rate_bps <= 0:
+            raise ValueError("cps_rate_bps must be positive")
+        if self.pon_rates_bps is not None:
+            rates = tuple(float(r) for r in self.pon_rates_bps)
+            if len(rates) != self.n_pons:
+                raise ValueError(
+                    f"pon_rates_bps needs {self.n_pons} entries; "
+                    f"got {len(rates)}"
+                )
+            object.__setattr__(self, "pon_rates_bps", rates)
+
+    @property
+    def trivial(self) -> bool:
+        """True when the topology adds nothing over a lone PONConfig
+        (the engine's bitwise-compatibility fast path)."""
+        return (self.n_pons == 1 and self.cps_rate_bps is None
+                and self.pon_rates_bps is None)
+
+    def rates(self, cfg) -> np.ndarray:
+        if self.pon_rates_bps is not None:
+            return np.asarray(self.pon_rates_bps, np.float64)
+        return np.full(self.n_pons, cfg.line_rate_bps, np.float64)
+
+    def capacity_bits(self, cfg) -> np.ndarray:
+        """Per-PON cycle capacity ``(n_pons,)`` (payload bits)."""
+        return self.rates(cfg) * cfg.cycle_time_s * cfg.efficiency
+
+    def cps_capacity_bits(self, cfg) -> Optional[float]:
+        if self.cps_rate_bps is None:
+            return None
+        return float(self.cps_rate_bps) * cfg.cycle_time_s
+
+    def total_onus(self, cfg) -> int:
+        return self.n_pons * cfg.n_onus
+
+    def pon_of(self, client_id: int, cfg) -> int:
+        return (int(client_id) % self.total_onus(cfg)) // cfg.n_onus
+
+    def local_onu(self, client_id: int, cfg) -> int:
+        return (int(client_id) % self.total_onus(cfg)) % cfg.n_onus
+
+
+def cps_waterfill(want: np.ndarray, cap) -> np.ndarray:
+    """Max-min fair split of the CPS cycle capacity across PONs.
+
+    ``want``: per-PON cycle demand, ``(..., n_pons)`` (a ``(G, P)``
+    batch from the engine or a single ``(P,)`` vector from the
+    oracle); ``cap``: CPS capacity per group, scalar or ``(G,)``.
+    Returns ``eff`` of ``want``'s shape with ``eff <= want``
+    elementwise, ``sum(eff) <= cap`` per group, and — when the cap
+    binds — ``eff_p = min(want_p, mu)`` at the exact water level.
+    Rows are independent, so the batched call and the per-row call
+    produce identical floats.
+    """
+    want = np.asarray(want, np.float64)
+    if want.ndim == 1:
+        return cps_waterfill(want[None, :], cap)[0]
+    G, P = want.shape
+    cap_b = np.broadcast_to(np.asarray(cap, np.float64), (G,))
+    tot = want.sum(axis=1)
+    eff = want.copy()
+    over = tot > cap_b + CAP_EPS
+    if not over.any():
+        return eff
+    w = want[over]
+    c = cap_b[over]
+    ws = np.sort(w, axis=1)
+    cum = np.cumsum(ws, axis=1)
+    # after fully granting the k smallest demands, the rest split the
+    # residual evenly: mu_k = (cap - sum of k smallest) / (P - k); the
+    # water level is the first feasible one (mu_k <= ws[k])
+    prev = cum - ws
+    mu_k = (c[:, None] - prev) / (P - np.arange(P, dtype=np.float64))
+    k = np.argmax(mu_k <= ws, axis=1)
+    mu = mu_k[np.arange(len(w)), k]
+    eff[over] = np.minimum(w, mu[:, None])
+    return eff
+
+
+def pon_bg_rates(clients: Sequence[ClientProfile], model_bits: float,
+                 total_load: float, cfg, topo: MultiPonTopology,
+                 t_round_hint: float = 10.0) -> np.ndarray:
+    """Per-ONU background rate ``(n_pons,)`` of each wavelength segment.
+
+    Each PON's offered background makes up ``total_load`` on *its*
+    wavelength given its own share of the training traffic (the
+    clients placed on it); with ``n_pons == 1`` this is exactly the
+    single-PON split the engine has always used.
+    """
+    rates = topo.rates(cfg)
+    total = topo.total_onus(cfg)
+    out = np.zeros(topo.n_pons)
+    for p in range(topo.n_pons):
+        cl = [c for c in clients
+              if (c.client_id % total) // cfg.n_onus == p]
+        if cl:
+            training_rate = (
+                len(cl)
+                * (model_bits + float(np.mean([c.m_ud_bits for c in cl])))
+                / max(t_round_hint, 1e-9)
+            )
+        else:
+            training_rate = 0.0
+        out[p] = background_rate_for_load(
+            total_load, float(rates[p]), training_rate
+        ) / cfg.n_onus
+    return out
+
+
+# ---------------------------------------------------------------------------
+# reference oracle: per-PON cycle loop + CPS post-pass
+# ---------------------------------------------------------------------------
+
+
+def _grant_total(grants: Dict[int, Dict[str, float]]) -> float:
+    return sum(b for kinds in grants.values() for b in kinds.values())
+
+
+def simulate_multi_pon_round(
+    cfg,
+    topo: MultiPonTopology,
+    workload,
+    total_load: float,
+    policy: str,
+    seed: int = 0,
+    t_round_hint: float = 10.0,
+    max_t: float = 600.0,
+    ul_deadline_s: Optional[float] = None,
+    no_dl_ids=frozenset(),
+    stream_round: int = 0,
+) -> RoundResult:
+    """Cycle-by-cycle multi-PON reference round (the parity oracle).
+
+    Per cycle and per PON the raw DBA grants are computed under the
+    PON's own wavelength capacity; the CPS post-pass waterfills the
+    shared capacity across the PONs' grant totals and any PON cut
+    below its raw total re-grants under its CPS share
+    (``grant(..., cap_bits=eff_p)``).  Background arrivals come from
+    the same counter streams the engine consumes, keyed
+    ``(seed, phase, stream_round, pon)``.  Semantics of everything
+    else (FIFO queues, credit attribution, deadlines, carriers that
+    skip the download) match ``repro.net.sim`` exactly.
+    """
+    if policy not in ("fcfs", "bs"):
+        raise ValueError(f"unknown policy {policy!r}")
+    P = topo.n_pons
+    n_local = cfg.n_onus
+    total = topo.total_onus(cfg)
+    clients = workload.clients
+    if policy == "bs":
+        bad = [c.client_id for c in clients if c.client_id >= total]
+        if bad:
+            raise ValueError(
+                f"bs policy requires client_id < n_onus * n_pons; got {bad}"
+            )
+    pon_of = {c.client_id: topo.pon_of(c.client_id, cfg) for c in clients}
+    onu_of = {c.client_id: topo.local_onu(c.client_id, cfg)
+              for c in clients}
+    rates = topo.rates(cfg)
+    cps_cap = topo.cps_capacity_bits(cfg)
+    per_onu = pon_bg_rates(clients, workload.model_bits, total_load,
+                           cfg, topo, t_round_hint)
+    cyc = cfg.cycle_time_s
+    prop = cfg.propagation_s
+    skip = frozenset(no_dl_ids)
+
+    def _cps_grants(raws, regrant):
+        if cps_cap is None:
+            return raws
+        want = np.array([_grant_total(g) for g in raws])
+        eff = cps_waterfill(want, cps_cap)
+        return [raws[p] if eff[p] >= want[p] else regrant(p, float(eff[p]))
+                for p in range(P)]
+
+    def _serve(qmaps, grants_all, remaining, done, t):
+        for p in range(P):
+            for onu_id, g in grants_all[p].items():
+                q = qmaps[p][onu_id]
+                if "bg" in g:
+                    q.serve(g["bg"], kind="bg")
+                if "fl" in g:
+                    served = q.serve(g["fl"], kind="fl")
+                    _credit(served, remaining, done, t, cfg)
+
+    def _fcfs_phase(bits0, ready, phase_idx, max_t_p, deadline):
+        queues = [[OnuQueue(i) for i in range(n_local)] for _ in range(P)]
+        dbas = [FCFSBestEffort(float(rates[p]), cyc, n_local,
+                               cfg.efficiency) for p in range(P)]
+        streams = counter_streams_for_pons(
+            seed, phase_idx, per_onu, cyc, n_local,
+            cfg.bg_burst_packets, round_index=stream_round,
+        )
+        sources = [[streams[p].source(i) for i in range(n_local)]
+                   for p in range(P)]
+        remaining = dict(bits0)
+        pending = dict(ready)
+        done: Dict[int, float] = {}
+        t = 0.0
+        while remaining and t < max_t_p:
+            for cid, t_ready in list(pending.items()):
+                if t_ready <= t + cyc:
+                    queues[pon_of[cid]][onu_of[cid]].push(
+                        ("fl", cid), remaining[cid], max(t_ready, t)
+                    )
+                    del pending[cid]
+            for p in range(P):
+                for q, src in zip(queues[p], sources[p]):
+                    q.push("bg", src.arrivals(cyc), t)
+            raws = [dbas[p].grant(queues[p]) for p in range(P)]
+            grants_all = _cps_grants(
+                raws, lambda p, e: dbas[p].grant(queues[p], cap_bits=e)
+            )
+            _serve(
+                [{q.onu_id: q for q in queues[p]} for p in range(P)],
+                grants_all, remaining, done, t,
+            )
+            t += cyc
+        if deadline is None:
+            for cid in list(remaining):
+                done[cid] = t + prop
+            remaining = {}
+        else:
+            for cid in remaining:
+                done[cid] = float("nan")
+        return done, dict(remaining)
+
+    def _bs_phase(bits0, ready, dl_done, max_t_p, deadline):
+        # The slice is a reserved T-CONT end to end (PON slot + CPS
+        # priority); background rides the residual CPS capacity and
+        # never feeds back into FL service, so — exactly as in the
+        # single-PON engine — the BS phase simulates no background.
+        # Queues carry their *global* ONU id: the SlicedDBA matches a
+        # slot to the queue whose onu_id equals the slot's client_id.
+        queues = [[OnuQueue(p * n_local + i) for i in range(n_local)]
+                  for p in range(P)]
+        dbas: list = []
+        specs: Dict[int, object] = {}
+        for p in range(P):
+            profs = [
+                ClientProfile(
+                    client_id=c.client_id, t_ud=c.t_ud,
+                    t_dl=dl_done[c.client_id], m_ud_bits=c.m_ud_bits,
+                    distance_m=c.distance_m,
+                )
+                for c in clients if pon_of[c.client_id] == p
+            ]
+            if not profs:
+                dbas.append(None)
+                continue
+            spec = compute_slice(
+                profs, t_current=0.0, t_round=0.0,
+                capacity_bps=float(rates[p] * cfg.efficiency), h=1,
+            )
+            slots = schedule_slots(profs, spec, round_start=0.0)
+            specs[p] = spec
+            dbas.append(SlicedDBA(
+                float(rates[p]), cyc, n_local, spec.bandwidth_bps,
+                slots, cfg.efficiency,
+            ))
+        remaining = dict(bits0)
+        pending = dict(ready)
+        done: Dict[int, float] = {}
+        t = 0.0
+        while remaining and t < max_t_p:
+            for cid, t_ready in list(pending.items()):
+                if t_ready <= t + cyc:
+                    queues[pon_of[cid]][onu_of[cid]].push(
+                        ("fl", cid), remaining[cid], max(t_ready, t)
+                    )
+                    del pending[cid]
+            raws = [dbas[p].grant(queues[p], t) if dbas[p] else {}
+                    for p in range(P)]
+            grants_all = _cps_grants(
+                raws,
+                lambda p, e: dbas[p].grant(queues[p], t, cap_bits=e),
+            )
+            _serve(
+                [{q.onu_id: q for q in queues[p]} for p in range(P)],
+                grants_all, remaining, done, t,
+            )
+            t += cyc
+        if deadline is None:
+            for cid in list(remaining):
+                done[cid] = t + prop
+            remaining = {}
+        else:
+            for cid in remaining:
+                done[cid] = float("nan")
+        return done, dict(remaining), specs
+
+    # ---- downstream ------------------------------------------------------
+    fresh = [c for c in clients if c.client_id not in skip]
+    if policy == "bs":
+        dl_done = {
+            c.client_id: (
+                0.0 if c.client_id in skip
+                else workload.model_bits
+                / (rates[pon_of[c.client_id]] * cfg.efficiency) + prop
+            )
+            for c in clients
+        }
+    else:
+        bits0 = {c.client_id: workload.model_bits for c in fresh}
+        ready0 = {c.client_id: 0.0 for c in fresh}
+        dl_done, _ = _fcfs_phase(bits0, ready0, 0, max_t, None)
+        for c in clients:
+            if c.client_id in skip:
+                dl_done[c.client_id] = 0.0
+
+    ready = {c.client_id: dl_done[c.client_id] + c.t_ud for c in clients}
+
+    # ---- upstream --------------------------------------------------------
+    ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
+    bits_ul = {c.client_id: c.m_ud_bits for c in clients}
+    specs: Dict[int, object] = {}
+    if policy == "bs":
+        ul_done, ul_remaining, specs = _bs_phase(
+            bits_ul, dict(ready), dl_done, ul_max_t, ul_deadline_s
+        )
+    else:
+        ul_done, ul_remaining = _fcfs_phase(
+            bits_ul, dict(ready), 1, ul_max_t, ul_deadline_s
+        )
+
+    if ul_remaining and ul_deadline_s is not None:
+        sync = ul_deadline_s + workload.t_aggregate
+    else:
+        sync = max(ul_done.values()) + workload.t_aggregate
+    return RoundResult(
+        policy=policy,
+        sync_time=sync,
+        dl_done=dl_done,
+        ready=ready,
+        ul_done=ul_done,
+        compute_bound=max(ready.values()),
+        load=total_load,
+        slice_spec=specs.get(0) if P == 1 else None,
+        ul_remaining=ul_remaining if ul_deadline_s is not None else None,
+    )

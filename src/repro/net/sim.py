@@ -19,7 +19,7 @@ synchronisation time is ``max_i upload_done_i + T_a``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -264,6 +264,7 @@ def simulate_round(
     ul_deadline_s: Optional[float] = None,
     no_dl_ids=frozenset(),
     stream_round: int = 0,
+    topology=None,
 ) -> RoundResult:
     """Simulate one synchronisation round under ``policy`` in {fcfs, bs}.
 
@@ -282,6 +283,12 @@ def simulate_round(
     ``no_dl_ids`` marks deadline carriers that skip the model download;
     ``stream_round`` keys the engine's arrival stream for multi-round
     timelines.
+
+    ``topology`` (``repro.net.multi_pon.MultiPonTopology``) stacks the
+    round over several wavelength segments sharing a CPS uplink; the
+    reference backend then runs the cycle-by-cycle multi-PON oracle
+    (``simulate_multi_pon_round``), which draws from the engine's
+    counter streams directly and accepts no injected sources.
     """
     if backend not in ("vectorized", "reference"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -293,10 +300,24 @@ def simulate_round(
             cfg,
             [SweepCase(workload=workload, load=total_load, policy=policy,
                        seed=seed, stream_round=stream_round,
-                       no_dl_ids=frozenset(no_dl_ids))],
+                       no_dl_ids=frozenset(no_dl_ids),
+                       topology=topology)],
             t_round_hint=t_round_hint,
             ul_deadline_s=ul_deadline_s,
         )[0]
+    if topology is not None and not topology.trivial:
+        from repro.net.multi_pon import simulate_multi_pon_round
+
+        if _dl_sources is not None or _ul_sources is not None:
+            raise ValueError(
+                "multi-PON reference rounds draw from counter streams; "
+                "injected per-ONU sources are single-PON only"
+            )
+        return simulate_multi_pon_round(
+            cfg, topology, workload, total_load, policy, seed=seed,
+            t_round_hint=t_round_hint, ul_deadline_s=ul_deadline_s,
+            no_dl_ids=frozenset(no_dl_ids), stream_round=stream_round,
+        )
 
     rng = np.random.default_rng(seed)
     clients = workload.clients

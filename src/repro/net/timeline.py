@@ -250,6 +250,7 @@ def _sequential(cfg, cases, schedule, t_round_hint, max_t):
             row_cases.append(SweepCase(
                 workload=wl, load=case.load, policy=case.policy,
                 seed=case.seed, stream_round=r, no_dl_ids=no_dl,
+                topology=case.topology,
             ))
         results = simulate_round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
@@ -288,6 +289,7 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t):
             rows.append(SweepCase(
                 workload=wl, load=case.load, policy=case.policy,
                 seed=case.seed, stream_round=r,
+                topology=case.topology,
             ))
     results = simulate_round_sweep(
         cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
@@ -365,6 +367,7 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
     """
     from repro.kernels.traffic.ops import make_stream_key
     from repro.net.engine import _case_bg_rate
+    from repro.net.multi_pon import simulate_multi_pon_round
     from repro.net.sim import simulate_round
     from repro.net.traffic import CounterStream
 
@@ -392,6 +395,22 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
                 model_bits=case.workload.model_bits,
                 t_aggregate=case.workload.t_aggregate,
             )
+            if case.topology is not None and not case.topology.trivial:
+                # the cycle-by-cycle multi-PON oracle keys its own
+                # (seed, phase, round, pon) counter streams
+                result = simulate_multi_pon_round(
+                    cfg, case.topology, wl, case.load, case.policy,
+                    seed=case.seed, t_round_hint=t_round_hint,
+                    max_t=max_t, ul_deadline_s=schedule.deadline(r),
+                    no_dl_ids=no_dl, stream_round=r,
+                )
+                rnd, carry = _round_view(
+                    r, t_now, result, rem_start,
+                    case.workload.t_aggregate,
+                )
+                res.rounds.append(rnd)
+                t_now += rnd.sync_time
+                continue
             row = SweepCase(workload=wl, load=case.load,
                             policy=case.policy, seed=case.seed)
             per_onu = _case_bg_rate(row, cfg, t_round_hint) / cfg.n_onus

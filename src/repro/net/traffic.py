@@ -124,6 +124,33 @@ class CounterSource:
         return float(self.stream.rows(k)[self.onu])
 
 
+def counter_streams_for_pons(
+    seed: int,
+    phase: int,
+    per_onu_rates,
+    cycle_s: float,
+    n_onus: int,
+    burst_packets: float = 16.0,
+    round_index: int = 0,
+) -> list:
+    """One :class:`CounterStream` per wavelength segment.
+
+    Segment ``p`` draws from the stream keyed
+    ``(seed, phase, round_index, pon=p)`` at its own per-ONU rate
+    ``per_onu_rates[p]`` — the exact streams the stacked multi-PON
+    engine consumes, exposed for the cycle-by-cycle reference oracle.
+    """
+    from repro.kernels.traffic.ops import make_stream_key
+
+    return [
+        CounterStream(
+            make_stream_key(seed, phase, round_index, pon),
+            float(rate), cycle_s, n_onus, burst_packets=burst_packets,
+        )
+        for pon, rate in enumerate(np.asarray(per_onu_rates, np.float64))
+    ]
+
+
 def per_onu_sources(
     total_rate_bps: float,
     n_onus: int,
