@@ -1,0 +1,221 @@
+"""Async/stale FL rounds: policy comparison + engine throughput.
+
+Two questions, matching ROADMAP's two closed open items:
+
+* **Engine throughput** (default + ``--full``): at the paper's 0.8-load
+  operating point (the Fig. 2b cell whose sync time is pinned at
+  5.0581 s), how fast does the timeline engine advance async
+  (FedBuff, two engine passes per round) rounds vs the sequential
+  deferral loop — simulator rounds/sec for both, plus the *simulated*
+  per-round sync times (async rounds fire at the ``buffer_k``-th
+  arrival, so their simulated span is a fraction of a full sync
+  round).
+* **Time-to-target accuracy** (``--full`` only — real CNN training):
+  the Fig. 2a-style accuracy-vs-wall-clock comparison across
+  sync / defer / drop / partial / async at 0.8 load, via the coupled
+  co-simulation (``FLNetworkCoSim.run(mode=..., deadline_s=...,
+  deadline_policy=...)``). The committed ``BENCH_async.json`` records
+  async reaching the target accuracy in less simulated wall-clock than
+  the synchronous baseline.
+
+``python benchmarks/async_timeline.py --full --json BENCH_async.json``
+writes the checked-in baseline; the default configuration (CI's
+``BENCH_async_ci.json`` step) measures the engine-throughput part only
+under the identical network configuration, so the regression-gate keys
+line up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# make `python benchmarks/async_timeline.py` work from anywhere: the
+# repo root (the ``benchmarks`` package's parent) must be importable
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from repro.net import (  # noqa: E402
+    FLRoundWorkload,
+    PONConfig,
+    SweepCase,
+    TimelineSchedule,
+    simulate_timeline_sweep,
+)
+
+TIER = "slow"                     # CI's dedicated step runs it instead
+
+M_BITS = 26.416e6
+N_ONUS = 128
+N_CLIENTS = 12
+LOAD = 0.8
+DEADLINE_S = 4.0
+BUFFER_K = 6
+
+
+def op_point_case(policy: str = "fcfs", seed: int = 1) -> SweepCase:
+    """The Fig. 2b 0.8-load operating point (sync pinned 5.0581 s) —
+    the same client construction as benchmarks/timeline.py, truncated
+    to the op point's 12 involved clients."""
+    from benchmarks.timeline import _clients
+
+    wl = FLRoundWorkload(clients=_clients(N_ONUS)[:N_CLIENTS],
+                         model_bits=M_BITS)
+    return SweepCase(workload=wl, load=LOAD, policy=policy, seed=seed)
+
+
+def net_part(n_rounds: int) -> dict:
+    """Async vs sequential-deferral engine throughput at the op point."""
+    cfg = PONConfig(n_onus=N_ONUS)
+    case = op_point_case()
+    # warm allocators / sampler LUTs
+    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1))
+
+    out = {"n_rounds": n_rounds, "load": LOAD, "n_onus": N_ONUS,
+           "deadline_s": DEADLINE_S, "buffer_k": BUFFER_K}
+    t0 = time.time()
+    sync = simulate_timeline_sweep(
+        cfg, [case], TimelineSchedule(n_rounds=n_rounds),
+    )[0]
+    out["sync_wall_s"] = time.time() - t0
+    t0 = time.time()
+    defer = simulate_timeline_sweep(
+        cfg, [case],
+        TimelineSchedule(n_rounds=n_rounds, deadline_s=DEADLINE_S),
+    )[0]
+    defer_wall = time.time() - t0
+    t0 = time.time()
+    asyn = simulate_timeline_sweep(
+        cfg, [case],
+        TimelineSchedule(n_rounds=n_rounds, buffer_k=BUFFER_K),
+    )[0]
+    async_wall = time.time() - t0
+    out.update({
+        "defer_wall_s": defer_wall,
+        "defer_rounds_per_sec": n_rounds / defer_wall,
+        "async_wall_s": async_wall,
+        "async_rounds_per_sec": n_rounds / async_wall,
+        "sim_sync_mean_s": float(sync.sync_times.mean()),
+        "sim_defer_mean_s": float(defer.sync_times.mean()),
+        "sim_async_mean_s": float(asyn.sync_times.mean()),
+        # simulated wall-clock advantage of firing at the k-th arrival
+        "sim_async_speedup_vs_sync": float(
+            sync.sync_times.mean() / asyn.sync_times.mean()
+        ),
+        "async_deferrals": int(
+            sum(len(r.deferred) for r in asyn.rounds)
+        ),
+    })
+    return out
+
+
+def accuracy_part(n_rounds: int, target: float = 0.8) -> dict:
+    """Time-to-target accuracy across sync/defer/drop/partial/async
+    (real CNN co-simulation at 0.8 load)."""
+    import jax
+
+    from repro.data import build_federated_cnn_clients
+    from repro.fl import CPSServer, SelectionConfig
+    from repro.fl.client import LocalTrainConfig
+    from repro.fl.simulation import CoSimConfig, FLNetworkCoSim
+    from repro.models import cnn
+
+    clients, test = build_federated_cnn_clients(
+        n_clients=8, samples_per_client=64, loss_fn=cnn.loss_fn,
+        train_cfg=LocalTrainConfig(lr=0.04, batch_size=16,
+                                   local_epochs=2),
+        seed=0,
+    )
+    test_batch = {"images": test["images"][:512],
+                  "labels": test["labels"][:512]}
+
+    def eval_fn(p):
+        return cnn.accuracy(p, test_batch)
+
+    def cosim():
+        server = CPSServer(
+            global_params=cnn.init_params(jax.random.PRNGKey(0)),
+            clients=clients,
+            selection=SelectionConfig(strategy="all"),
+            seed=1,
+        )
+        # uploads sized so the 3.5s deadline genuinely cuts a slot
+        # mid-transfer (partial fractions in (0, 1), not just 0)
+        cfg = CoSimConfig(
+            policy="bs", total_load=LOAD, model_bits=2e6,
+            upload_bits=3e8, timing_seeds=1,
+            pon=PONConfig(n_onus=8, line_rate_bps=1e9),
+        )
+        return FLNetworkCoSim(server, cfg)
+
+    modes = {
+        "sync": {},
+        "defer": {"deadline_s": 3.5, "deadline_policy": "defer"},
+        "drop": {"deadline_s": 3.5, "deadline_policy": "drop"},
+        "partial": {"deadline_s": 3.5, "deadline_policy": "partial"},
+        "async": {"mode": "async", "async_buffer": 4},
+    }
+    cells = {}
+    for name, kw in modes.items():
+        res = cosim().run(n_rounds, eval_fn=eval_fn, **kw)
+        tt = res.time_to_metric(target)
+        cells[name] = {
+            "total_sim_s": res.total_time_s,
+            "time_to_target_s": tt,
+            "acc_curve": [round(float(r["eval_metric"]), 3)
+                          for r in res.rounds],
+            "sync_times_s": [round(float(r["sync_time_s"]), 3)
+                             for r in res.rounds],
+        }
+    return {"target_accuracy": target, "n_rounds": n_rounds,
+            "cells": cells}
+
+
+def measure(full: bool = False) -> dict:
+    # the net part runs the SAME configuration with and without --full,
+    # so the committed baseline's throughput keys match CI's fresh
+    # measurement; --full adds the (minutes-long) accuracy comparison
+    payload = {
+        "benchmark": "async_timeline_policies",
+        **net_part(n_rounds=6),
+    }
+    if full:
+        payload["accuracy"] = accuracy_part(n_rounds=10)
+    return payload
+
+
+def run() -> list:
+    m = measure(full=False)
+    return [
+        {
+            "name": "async_timeline_net",
+            "us_per_call": m["async_wall_s"] * 1e6,
+            "derived": (
+                f"async_rounds_per_sec={m['async_rounds_per_sec']:.2f} "
+                f"defer_rounds_per_sec={m['defer_rounds_per_sec']:.2f} "
+                f"sim_async_speedup={m['sim_async_speedup_vs_sync']:.2f}x"
+            ),
+        }
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also run the CNN accuracy comparison (minutes)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement payload as JSON")
+    args = ap.parse_args()
+    m = measure(full=args.full)
+    print(json.dumps(m, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(m, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,17 @@ def _payload_metrics(payload: dict) -> Dict[str, float]:
             out[f"timeline_rounds_n{tp['n_onus']}.rounds_per_sec"] = (
                 tp["rounds_per_sec"]
             )
+    elif bench == "async_timeline_policies":
+        # the net part runs R=6 in both default and --full modes, so
+        # baseline and CI keys match; embedding R in the key makes any
+        # future round-count change un-match instead of mis-compare
+        r = payload["n_rounds"]
+        out[f"async_net_r{r}.rounds_per_sec"] = (
+            payload["async_rounds_per_sec"]
+        )
+        out[f"defer_net_r{r}.rounds_per_sec"] = (
+            payload["defer_rounds_per_sec"]
+        )
     elif bench == "multi_pon_stacked_vs_per_pon_loop":
         for cell in payload.get("cells", []):
             name = f"multi_pon_round_n{cell['n_onus']}_p{cell['n_pons']}"

@@ -24,6 +24,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def collect_modules(tier: str):
     from benchmarks import (
+        async_timeline,
         bs_micro,
         fig2a_accuracy,
         fig2b_sync_time,
@@ -41,6 +42,7 @@ def collect_modules(tier: str):
         ("net_engine", net_engine),
         ("multi_pon", multi_pon),
         ("timeline", timeline),
+        ("async_timeline", async_timeline),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),
     ]

@@ -26,10 +26,13 @@ from repro.dist.sharding import (  # noqa: F401
     param_specs,
 )
 from repro.dist.stepfns import (  # noqa: F401
+    AsyncRoundState,
     TrainState,
     fed_update_bits,
+    init_async_state,
     init_fed_state,
     init_train_state,
+    make_async_round_step,
     make_decode_step,
     make_fed_round_step,
     make_fed_train_step,

@@ -20,6 +20,18 @@ so compression noise averages out instead of biasing FedAvg. The
 residual pytree lives in the round state (``init_residuals`` /
 ``fedavg_pods(..., residuals=...)``) and stays pod-local — it is never
 transmitted.
+
+Asynchronous rounds (FedBuff): ``fedbuff_pods`` applies a *buffered*
+staleness-weighted delta merge instead of a full average — only the
+pods whose upload reached the CPS this round (``arrived``) contribute,
+each discounted by ``1/(1+τ)^p`` for its staleness ``τ`` (rounds since
+it downloaded the model it trained on) and optionally scaled by a
+served *fraction* (the network layer's ``deadline_policy="partial"``).
+The merge consumes snapshotted update deltas (one per pod, frozen when
+the pod finished its local round — its upload payload), so a pod whose
+upload is still in flight contributes exactly the bits it put on the
+wire, not whatever its parameters drifted to since. Host-side mirror:
+``repro.fl.aggregation.fedbuff_merge``.
 """
 from __future__ import annotations
 
@@ -136,3 +148,110 @@ def fedavg_pods(params, weights: jnp.ndarray, scheme: str = "none",
         lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
     )
     return avg_params, new_residuals
+
+
+# ---------------------------------------------------------------------------
+# asynchronous (FedBuff) aggregation
+# ---------------------------------------------------------------------------
+
+
+def staleness_discount(staleness, power: float = 0.5) -> jnp.ndarray:
+    """``(1 + τ)^-p`` — the FedBuff staleness weight (p=0.5 default)."""
+    return (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-power)
+
+
+def compress_deltas(deltas: jnp.ndarray, scheme: str,
+                    topk_frac: float = 0.05, residual=None):
+    """Round-trip pod-stacked update *deltas* through the wire encoding.
+
+    Unlike :func:`compress_pod_updates` there is no pod-0 reference —
+    ``deltas`` already are the small wire payloads (params minus each
+    pod's own download reference). With ``residual`` returns
+    ``(decoded, new_residual)`` for error feedback; the caller masks
+    the residual update to the pods that actually transmitted.
+    """
+    scheme = check_scheme(scheme)
+    if scheme == "none":
+        return deltas if residual is None else (deltas, residual)
+    target = deltas.astype(jnp.float32)
+    if residual is not None:
+        target = target + residual
+    comp = target
+    if "topk" in scheme:
+        comp = jax.vmap(partial(topk_sparsify, frac=topk_frac))(comp)
+    if "int8" in scheme:
+        q, scale = jax.vmap(quantize_int8)(comp)
+        comp = jax.vmap(dequantize_int8)(q, scale)
+    decoded = comp.astype(deltas.dtype)
+    if residual is None:
+        return decoded
+    return decoded, target - comp
+
+
+def _bmask(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a ``(n_pods,)`` mask to broadcast over a stacked leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def fedbuff_pods(pending, global_params, weights: jnp.ndarray,
+                 arrived: jnp.ndarray, staleness: jnp.ndarray,
+                 server_lr: float = 1.0, scheme: str = "none",
+                 topk_frac: float = 0.05, staleness_power: float = 0.5,
+                 frac=None, residuals=None):
+    """Buffered staleness-weighted (FedBuff) merge over the pod axis.
+
+    ``pending``: pytree of ``(n_pods, ...)`` snapshotted update deltas
+    (each pod's upload payload); ``global_params``: pod-stacked
+    broadcast copies of the current global model; ``arrived``:
+    ``(n_pods,)`` bool — whose upload completed this round;
+    ``staleness``: ``(n_pods,)`` rounds since each pod downloaded the
+    model it trained on; ``frac``: optional served fraction in
+    ``[0, 1]`` (partial updates). The new global is
+
+        ``G' = G + server_lr · Σ_i (w_i/Σ_j w_j) · s_i · f_i · Δ_i``
+        over arrived pods, ``s_i = (1+τ_i)^-p``, ``f_i`` the fraction
+
+    (a no-op when nothing arrived). Data weights ``w`` mix the
+    co-arrivals *relatively* (all fresh and complete ⇒ exactly the
+    FedAvg delta step), while staleness and fraction discount each
+    update *absolutely* — a lone stale or partial arrival moves the
+    global by ``s·f·Δ``, never by the full delta (self-normalising the
+    discounts would cancel them whenever one update arrives alone).
+    Same fp32-accumulate/cast-back numerics as :func:`fedavg_pods`;
+    with ``residuals`` the arrived pods' wire encodings run through
+    error feedback (non-arrived pods' residuals pass through
+    untouched) and the call returns ``(new_global, new_residuals)``.
+    """
+    m = arrived.astype(jnp.float32)
+    w = weights.astype(jnp.float32) * m
+    s = staleness_discount(staleness, staleness_power)
+    f = jnp.ones_like(w) if frac is None else jnp.asarray(frac, jnp.float32)
+    # Σ w = 0 (no arrivals) must leave the global untouched
+    w_norm = w / jnp.maximum(w.sum(), 1e-12) * s * f * m
+
+    def merge(leaf_delta, g, res=None):
+        if res is None:
+            decoded = compress_deltas(leaf_delta, scheme, topk_frac)
+        else:
+            decoded, cand = compress_deltas(
+                leaf_delta, scheme, topk_frac, residual=res
+            )
+        upd = jnp.tensordot(w_norm, decoded.astype(jnp.float32), axes=1)
+        newg = (
+            g.astype(jnp.float32) + server_lr * upd[None]
+        ).astype(g.dtype)
+        if res is None:
+            return newg
+        new_res = jnp.where(_bmask(arrived, res), cand, res)
+        return newg, new_res
+
+    if residuals is None:
+        return jax.tree.map(merge, pending, global_params)
+    pairs = jax.tree.map(merge, pending, global_params, residuals)
+    new_global = jax.tree.map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_residuals = jax.tree.map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return new_global, new_residuals

@@ -225,6 +225,115 @@ def init_round_residuals(state: TrainState):
     return fedops.init_residuals(state.params)
 
 
+# ---------------------------------------------------------------------------
+# asynchronous federated round (FedBuff on the pod axis)
+# ---------------------------------------------------------------------------
+
+
+class AsyncRoundState(NamedTuple):
+    """Cross-round state of the async (FedBuff) federated loop.
+
+    ``global_params``: pod-stacked broadcast copies of the current
+    global model (every pod holds the same rows). ``refs``: each pod's
+    *download reference* — the global model it last synced to, which
+    its next upload delta is computed against (pods that downloaded at
+    different rounds hold different refs). ``pending``: each pod's
+    snapshotted fp32 update delta — the payload travelling on the wire
+    while the pod's upload is in flight.
+    """
+
+    global_params: Any
+    refs: Any
+    pending: Any
+
+
+def init_async_state(state: TrainState) -> AsyncRoundState:
+    """Fresh async state: every pod synced to the same global model,
+    nothing in flight."""
+    return AsyncRoundState(
+        global_params=state.params,
+        refs=state.params,
+        pending=jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), state.params
+        ),
+    )
+
+
+def make_async_round_step(cfg: ModelConfig, compress: Optional[str] = None,
+                          topk_frac: float = 0.05,
+                          error_feedback: bool = False,
+                          server_lr: float = 1.0,
+                          staleness_power: float = 0.5) -> Callable:
+    """Buffered asynchronous aggregation (FedBuff) across the pod axis.
+
+    ``async_step(state, astate, weights, arrived, staleness, frac,
+    snap, rejoin) -> (state, astate)`` where all mask/weight args are
+    ``(n_pods,)`` arrays driven by the network timeline
+    (``repro.net.timeline`` async mode — arrivals, staleness and
+    partial fractions per aggregation event):
+
+    * ``snap`` (bool): pods that just finished their local round —
+      their update delta ``params - refs`` is snapshotted into
+      ``pending`` (the upload begins; later training never leaks into
+      the in-flight payload);
+    * ``arrived`` (bool): pods whose upload reached the CPS this round
+      — their pending deltas merge into the global, weighted
+      ``w_i · frac_i / (1+τ_i)^p`` (``staleness`` τ in rounds,
+      ``frac`` the served fraction for partial updates);
+    * ``rejoin`` (bool): pods that resync to the new global
+      (arrived pods re-entering, and drop-policy pods whose update was
+      discarded) — their params and refs take the fresh broadcast;
+      stragglers still uploading keep theirs.
+
+    Optimizer moments stay pod-local, as in the sync round step. With
+    ``error_feedback=True`` the signature grows a trailing
+    ``residuals`` arg and returns ``(state, astate, residuals)`` —
+    arrived pods' wire encodings run through the same error-feedback
+    pipeline as the sync compressed round.
+    """
+    scheme = fedops.check_scheme(compress)
+
+    def _advance(state, astate, weights, arrived, staleness, frac,
+                 snap, rejoin, residuals):
+        pending = jax.tree.map(
+            lambda p, ref, pen: jnp.where(
+                fedops._bmask(snap, pen),
+                (p.astype(jnp.float32) - ref.astype(jnp.float32)), pen,
+            ),
+            state.params, astate.refs, astate.pending,
+        )
+        merged = fedops.fedbuff_pods(
+            pending, astate.global_params, weights, arrived, staleness,
+            server_lr=server_lr, scheme=scheme, topk_frac=topk_frac,
+            staleness_power=staleness_power, frac=frac,
+            residuals=residuals,
+        )
+        new_global, new_res = merged if error_feedback else (merged, None)
+        take = lambda new, old: jax.tree.map(  # noqa: E731
+            lambda n, o: jnp.where(fedops._bmask(rejoin, o), n, o),
+            new, old,
+        )
+        params = take(new_global, state.params)
+        refs = take(new_global, astate.refs)
+        new_astate = AsyncRoundState(
+            global_params=new_global, refs=refs, pending=pending
+        )
+        return TrainState(params=params, opt=state.opt), new_astate, new_res
+
+    if error_feedback:
+        return _advance
+
+    def async_step(state, astate, weights, arrived, staleness, frac,
+                   snap, rejoin):
+        state, astate, _ = _advance(
+            state, astate, weights, arrived, staleness, frac, snap,
+            rejoin, None,
+        )
+        return state, astate
+
+    return async_step
+
+
 def fed_update_bits(cfg: ModelConfig, compress: Optional[str] = "int8",
                     topk_frac: float = 0.05) -> int:
     """Wire bits of ONE pod's upload under ``compress`` (``M_i^UD``).

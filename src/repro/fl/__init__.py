@@ -5,6 +5,8 @@ from repro.fl.aggregation import (  # noqa: F401
     fedadam_step,
     fedavg,
     fedavg_delta,
+    fedbuff_merge,
+    staleness_scale,
 )
 from repro.fl.client import Client, LocalTrainConfig  # noqa: F401
 from repro.fl.compression import (  # noqa: F401
@@ -16,7 +18,11 @@ from repro.fl.compression import (  # noqa: F401
     topk_sparsify,
 )
 from repro.fl.selection import SelectionConfig, select_clients  # noqa: F401
-from repro.fl.server import CPSServer, RoundLog  # noqa: F401
+from repro.fl.server import (  # noqa: F401
+    CPSServer,
+    PendingUpdate,
+    RoundLog,
+)
 from repro.fl.simulation import (  # noqa: F401
     CoSimConfig,
     CoSimResult,

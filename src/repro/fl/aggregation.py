@@ -84,19 +84,68 @@ def fedadam_step(
     return new_params, ServerAdamState(mu=mu, nu=nu, count=count)
 
 
+def staleness_scale(staleness: float, power: float = 0.5) -> float:
+    """``(1 + τ)^-p`` — the FedBuff staleness discount (p=0.5 default).
+
+    Host-side mirror of ``repro.dist.fedops.staleness_discount``.
+    """
+    return float((1.0 + float(staleness)) ** (-power))
+
+
+def fedbuff_merge(global_params, deltas: Sequence,
+                  weights: Sequence[float],
+                  staleness: Optional[Sequence[float]] = None,
+                  server_lr: float = 1.0,
+                  staleness_power: float = 0.5,
+                  fracs: Optional[Sequence[float]] = None):
+    """Staleness-weighted buffered delta merge (FedBuff).
+
+    ``G' = G + server_lr · Σ_i (w_i/Σ_j w_j) · s_i · f_i · Δ_i`` with
+    ``s_i = (1+τ_i)^-p`` and ``f_i`` the served fraction — the
+    host-side mirror of ``repro.dist.fedops.fedbuff_pods`` (same
+    fp32-accumulate, cast-back numerics). Data weights mix co-arrivals
+    *relatively* (all fresh and complete ⇒ the FedAvg delta step);
+    staleness and fraction discount *absolutely*, so a lone stale or
+    partial arrival moves the global by ``s·f·Δ``, never the full
+    delta. An empty buffer is a no-op.
+    """
+    deltas = list(deltas)
+    if not deltas:
+        return global_params
+    taus = [0.0] * len(deltas) if staleness is None else list(staleness)
+    fs = [1.0] * len(deltas) if fracs is None else list(fracs)
+    total_w = float(sum(weights))
+    if total_w <= 0.0:
+        return global_params
+    coeffs = [
+        w / total_w * staleness_scale(t, staleness_power) * f
+        for w, t, f in zip(weights, taus, fs)
+    ]
+
+    def step(p, *ds):
+        upd = sum(
+            c * d.astype(jnp.float32) for c, d in zip(coeffs, ds)
+        )
+        return (p.astype(jnp.float32) + server_lr * upd).astype(p.dtype)
+
+    return jax.tree.map(step, global_params, *deltas)
+
+
 @dataclass
 class FedBuffAggregator:
     """Asynchronous aggregation (FedBuff): apply once K updates buffered.
 
-    Staleness is discounted with 1/sqrt(1+s) — a standard choice.
+    Staleness is discounted with ``staleness_scale`` (1/sqrt(1+τ) at
+    the default power) — a standard choice.
     """
 
     buffer_size: int = 8
     server_lr: float = 1.0
+    staleness_power: float = 0.5
     _buffer: List = field(default_factory=list)
 
     def add(self, delta, weight: float, staleness: int = 0) -> bool:
-        scale = weight / jnp.sqrt(1.0 + staleness)
+        scale = weight * staleness_scale(staleness, self.staleness_power)
         self._buffer.append((delta, float(scale)))
         return len(self._buffer) >= self.buffer_size
 
@@ -105,16 +154,10 @@ class FedBuffAggregator:
             return global_params
         deltas = [d for d, _ in self._buffer]
         weights = [w for _, w in self._buffer]
-        avg_delta = fedavg(deltas, weights)
-        new_params = jax.tree.map(
-            lambda p, d: (
-                p.astype(jnp.float32) + self.server_lr * d.astype(jnp.float32)
-            ).astype(p.dtype),
-            global_params,
-            avg_delta,
-        )
         self._buffer.clear()
-        return new_params
+        return fedbuff_merge(
+            global_params, deltas, weights, server_lr=self.server_lr
+        )
 
     @property
     def pending(self) -> int:

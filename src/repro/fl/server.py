@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.core.slicing import ClientProfile
-from repro.fl.aggregation import fedavg
+from repro.fl.aggregation import fedavg, fedbuff_merge
 from repro.fl.client import Client
 from repro.fl.compression import CompressorConfig, compress_delta
 from repro.fl.selection import SelectionConfig, select_clients
@@ -30,6 +30,20 @@ class RoundLog:
     update_bits: float
     eval_metric: Optional[float] = None
     sync_time_s: Optional[float] = None
+
+
+@dataclass
+class PendingUpdate:
+    """A trained-and-compressed client update awaiting arrival at the
+    CPS — the co-simulation holds these while the upload is in flight
+    (deferred/async rounds) and applies them staleness-weighted when
+    the network says they landed."""
+
+    client_id: int
+    delta: object                   # decoded wire delta vs base params
+    weight: float                   # client data size
+    loss: float                     # local training loss
+    bits: float                     # wire bits of the full update
 
 
 @dataclass
@@ -106,6 +120,75 @@ class CPSServer:
             n_arrived=len(arrived_params),
             mean_loss=float(np.mean(losses)) if losses else float("nan"),
             update_bits=float(bits_total),
+            eval_metric=(
+                float(eval_fn(self.global_params)) if eval_fn else None
+            ),
+        )
+        self.history.append(log)
+        return log
+
+    def train_client_update(self, client: Client,
+                            base_params) -> Optional[PendingUpdate]:
+        """Local training + wire compression against ``base_params``.
+
+        The returned ``PendingUpdate.delta`` is the *decoded* delta the
+        CPS reconstructs (same error-feedback pipeline as the sync
+        round); it stays pending until the network simulation delivers
+        it — possibly rounds later, with staleness. ``failure_prob``
+        rolls exactly as in :meth:`run_round`: a failed client returns
+        ``None`` (its update is lost mid-round).
+        """
+        if self.failure_prob and self.rng.random() < self.failure_prob:
+            return None
+        local_params, loss = client.train(base_params, self.rng)
+        delta = jax.tree.map(lambda a, b: a - b, local_params, base_params)
+        decoded, err, bits = compress_delta(
+            delta, self.compression,
+            self._error_states.get(client.client_id),
+        )
+        if err is not None:
+            self._error_states[client.client_id] = err
+        return PendingUpdate(
+            client_id=client.client_id, delta=decoded,
+            weight=float(client.n_samples), loss=float(loss),
+            bits=float(bits),
+        )
+
+    def apply_updates(
+        self,
+        items: Sequence,
+        eval_fn: Optional[Callable] = None,
+        server_lr: float = 1.0,
+    ) -> RoundLog:
+        """One aggregation event: merge the arrived updates.
+
+        ``items``: ``(update, staleness, frac)`` triples — a
+        :class:`PendingUpdate`, its staleness in rounds, and the served
+        fraction (1.0 for complete uploads; the network layer's
+        ``deadline_policy="partial"`` delivers fractions). The global
+        model moves by the staleness/fraction-discounted weighted delta
+        (``fedbuff_merge`` — data weights mix relatively, the discounts
+        apply absolutely); an empty event only advances the round
+        counter (the deadline fired with nothing aggregated).
+        """
+        items = list(items)
+        self._round += 1
+        if items:
+            self.global_params = fedbuff_merge(
+                self.global_params,
+                [u.delta for u, _, _ in items],
+                [u.weight for u, _, _ in items],
+                [s for _, s, _ in items],
+                server_lr=server_lr,
+                fracs=[f for _, _, f in items],
+            )
+        losses = [u.loss for u, _, _ in items]
+        log = RoundLog(
+            round_index=self._round,
+            n_selected=len(items),
+            n_arrived=len(items),
+            mean_loss=float(np.mean(losses)) if losses else float("nan"),
+            update_bits=float(sum(u.bits * f for u, _, f in items)),
             eval_metric=(
                 float(eval_fn(self.global_params)) if eval_fn else None
             ),

@@ -16,6 +16,16 @@ Network timing backends (``FLNetworkCoSim.run``):
 * ``"per_round"`` — the PR 2 loop: one engine call per round, with the
   paper's observation that a fixed client set reuses its timing (the BS
   slice is recomputed only on membership change) expressed as a cache.
+
+Deadline/async co-simulation (``mode="sync"`` with ``deadline_s``, or
+``mode="async"``): timing and learning *couple* — who arrives in each
+aggregation event, how stale, and with what served fraction is decided
+by the network simulation, so the net timeline runs first and then
+drives the training loop update by update. Deferred and async-straggler
+updates apply staleness-weighted (``1/sqrt(1+τ)``, FedBuff), dropped
+updates never apply, and partial updates apply scaled by the served
+fraction — the Fig. 2a-style accuracy-vs-wall-clock comparison across
+sync/drop/defer/partial/async under both DBA policies.
 """
 from __future__ import annotations
 
@@ -92,9 +102,15 @@ class FLNetworkCoSim:
         self._update_bits_from_compression = False
 
     def _round_sync_time(self, clients: List[ClientProfile]) -> float:
+        # the key must pin every cfg field the timing depends on —
+        # model_bits/upload_bits included, or mutating cfg between
+        # run() calls on a reused co-sim would serve stale timings
         key = (
             self.cfg.policy,
             round(self.cfg.total_load, 6),
+            self.cfg.model_bits,
+            self.cfg.upload_bits,
+            self.cfg.pon,
             self.cfg.topology,
             tuple(sorted((c.client_id, round(c.t_ud, 6), c.m_ud_bits)
                          for c in clients)),
@@ -118,14 +134,15 @@ class FLNetworkCoSim:
             )
         return self._timing_cache[key]
 
-    def _round_profiles(self, log) -> Tuple[List[ClientProfile], float]:
-        m_bits = (
-            self.cfg.upload_bits
-            if self.cfg.upload_bits is not None
-            else self.cfg.model_bits
-        )
-        if self._update_bits_from_compression and log.n_arrived:
-            m_bits = log.update_bits / max(log.n_arrived, 1)
+    def _client_profiles(
+        self, m_bits: Optional[float] = None,
+    ) -> Tuple[List[ClientProfile], float]:
+        if m_bits is None:
+            m_bits = (
+                self.cfg.upload_bits
+                if self.cfg.upload_bits is not None
+                else self.cfg.model_bits
+            )
         profiles = [
             ClientProfile(
                 client_id=c.client_id,
@@ -137,6 +154,12 @@ class FLNetworkCoSim:
             for c in self.server.clients
         ]
         return profiles, float(m_bits)
+
+    def _round_profiles(self, log) -> Tuple[List[ClientProfile], float]:
+        m_bits = None
+        if self._update_bits_from_compression and log.n_arrived:
+            m_bits = log.update_bits / max(log.n_arrived, 1)
+        return self._client_profiles(m_bits)
 
     def _timeline_sync_times(
         self, per_round: List[List[ClientProfile]],
@@ -175,12 +198,110 @@ class FLNetworkCoSim:
         )
         return np.mean([r.sync_times for r in results], axis=0)
 
+    def _run_coupled(
+        self,
+        n_rounds: int,
+        eval_fn: Optional[Callable],
+        deadline_s,
+        deadline_policy: str,
+        buffer_k: Optional[int],
+    ) -> CoSimResult:
+        """Deadline/async co-simulation: the network decides per round
+        who arrives (and how stale / how complete), the training loop
+        follows.
+
+        Every client participates each round unless its previous upload
+        is still in flight (a deferred or async straggler — it idles
+        until the stale update lands, then re-enters fresh). Fresh
+        participants train against the global model at their entry
+        round (a ``failure_prob`` roll can kill the update, exactly as
+        in the sync path); their decoded update applies at the
+        aggregation event the network delivers it to, discounted by
+        staleness and served fraction
+        (``fl.aggregation.fedbuff_merge``).
+
+        Who arrives in which round is an *event*, not an average, so
+        the coupled path follows one arrival realization —
+        ``timing_seeds`` must be 1 (the decoupled path averages sync
+        times over seeds; arrival sets cannot be averaged).
+        """
+        if self.cfg.timing_seeds != 1:
+            raise ValueError(
+                "coupled deadline/async co-simulation follows one "
+                "arrival realization; set timing_seeds=1 (who arrives "
+                "per round is an event, not an averageable time)"
+            )
+        profiles, _ = self._client_profiles()
+        wl = FLRoundWorkload(
+            clients=profiles, model_bits=self.cfg.model_bits
+        )
+        schedule = TimelineSchedule(
+            n_rounds=n_rounds, deadline_s=deadline_s,
+            deadline_policy=deadline_policy, buffer_k=buffer_k,
+        )
+        net = simulate_timeline_sweep(
+            self.cfg.pon,
+            [SweepCase(workload=wl, load=self.cfg.total_load,
+                       policy=self.cfg.policy, seed=0,
+                       topology=self.cfg.topology)],
+            schedule,
+        )[0]
+        by_id = {c.client_id: c for c in self.server.clients}
+        pending: Dict[int, "PendingUpdate"] = {}
+        rounds = []
+        total_time = 0.0
+        for rnd in net.rounds:
+            fresh = sorted(set(rnd.ul_bits) - set(pending))
+            for cid in fresh:
+                # a failed client (same roll as the sync path) uploads
+                # bits the network still carries, but its update is
+                # lost — it contributes nothing when it "arrives"
+                pending[cid] = self.server.train_client_update(
+                    by_id[cid], self.server.global_params,
+                )
+            items = []
+            for cid in rnd.arrived:
+                u = pending.pop(cid)
+                if u is not None:
+                    items.append((u, rnd.staleness.get(cid, 0), 1.0))
+            for cid in sorted(rnd.partial):
+                u = pending.pop(cid)
+                frac = rnd.partial[cid]
+                if u is not None and frac > 0.0:
+                    items.append((u, 0, frac))
+            for cid in rnd.dropped:
+                pending.pop(cid, None)
+            log = self.server.apply_updates(items, eval_fn=eval_fn)
+            log.sync_time_s = rnd.sync_time
+            total_time += rnd.sync_time
+            rounds.append(
+                {
+                    "round": log.round_index,
+                    "eval_metric": log.eval_metric,
+                    "mean_loss": log.mean_loss,
+                    "sync_time_s": rnd.sync_time,
+                    "n_arrived": log.n_arrived,
+                    "staleness": dict(rnd.staleness),
+                }
+            )
+        return CoSimResult(
+            rounds=rounds,
+            total_time_s=total_time,
+            sync_time_s=rounds[-1]["sync_time_s"] if rounds else 0.0,
+            policy=self.cfg.policy,
+            load=self.cfg.total_load,
+        )
+
     def run(
         self,
         n_rounds: int,
         eval_fn: Optional[Callable] = None,
         update_bits_from_compression: bool = False,
         backend: str = "timeline",
+        mode: str = "sync",
+        deadline_s=None,
+        deadline_policy: str = "defer",
+        async_buffer: Optional[int] = None,
     ) -> CoSimResult:
         """Train ``n_rounds`` rounds and attach simulated network timing.
 
@@ -188,9 +309,38 @@ class FLNetworkCoSim:
         one stacked multi-round simulation after training;
         ``backend="per_round"`` keeps the PR 2 loop (one engine call per
         round, cached by client set) as the reference.
+
+        ``mode="async"`` (FedBuff: each aggregation fires at the
+        ``async_buffer``-th completed upload; default half the clients)
+        or a ``deadline_s`` with a ``deadline_policy`` switch to the
+        *coupled* co-simulation, where simulated arrival times decide
+        which updates reach each aggregation event, how stale, and how
+        complete — see :meth:`_run_coupled`. Compression-measured
+        upload sizes (``update_bits_from_compression``) are a
+        decoupled-path feature only.
         """
         if backend not in ("timeline", "per_round"):
             raise ValueError(f"unknown backend {backend!r}")
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if async_buffer is not None:
+            # an explicit buffer IS the async request (mirrors the CLI,
+            # where --async-buffer alone enables FedBuff); combining it
+            # with a deadline fails in TimelineSchedule's validation
+            mode = "async"
+        if mode == "async" or deadline_s is not None:
+            if update_bits_from_compression:
+                raise ValueError(
+                    "update_bits_from_compression needs the decoupled "
+                    "path; coupled deadline/async timing runs before "
+                    "training"
+                )
+            if mode == "async" and async_buffer is None:
+                async_buffer = max(1, len(self.server.clients) // 2)
+            return self._run_coupled(
+                n_rounds, eval_fn, deadline_s, deadline_policy,
+                async_buffer if mode == "async" else None,
+            )
         self._update_bits_from_compression = update_bits_from_compression
         rounds = []
         per_round_profiles: List[List[ClientProfile]] = []

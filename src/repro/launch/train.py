@@ -51,6 +51,9 @@ def train(
     config_overrides: Optional[dict] = None,
     n_pons: int = 1,
     cps_gbps: Optional[float] = None,
+    deadline_s: Optional[float] = None,
+    deadline_policy: str = "defer",
+    async_buffer: Optional[int] = None,
 ):
     cfg = get_config(arch, smoke=smoke).replace(grad_accum=1)
     if config_overrides:
@@ -128,16 +131,29 @@ def train(
                 cps_rate_bps=None if cps_gbps is None else cps_gbps * 1e9,
             )
         # one stacked multi-round timeline provides every round's sync
-        # time (per-round arrival streams, not one number reused R times)
+        # time (per-round arrival streams, not one number reused R times);
+        # deadlines/async cut rounds short and hand arrivals + staleness
+        # to the aggregation step below
         wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
         n_net_rounds = max(rounds - start_round, 1)
         timeline = simulate_timeline_sweep(
             pon,
             [SweepCase(workload=wl, load=load, policy=policy, seed=0,
                        topology=topology)],
-            TimelineSchedule(n_rounds=n_net_rounds),
+            TimelineSchedule(n_rounds=n_net_rounds, deadline_s=deadline_s,
+                             deadline_policy=deadline_policy,
+                             buffer_k=async_buffer),
         )[0]
         sync_times = timeline.sync_times
+        # deadline/async rounds: not every pod's update reaches every
+        # aggregation — drive the buffered staleness-weighted round step
+        # from the simulated arrivals instead of the plain FedAvg
+        coupled = fed and (deadline_s is not None or async_buffer is not None)
+        if coupled:
+            astate = stepfns.init_async_state(state)
+            around = jax.jit(
+                stepfns.make_async_round_step(cfg, compress=compress)
+            )
 
         wall_simulated = 0.0
         history = []
@@ -162,7 +178,39 @@ def train(
                     print(f"round {rnd} step {it}: loss={loss:.4f}")
             if fed:
                 weights = jnp.ones((pods,), jnp.float32)
-                state = round_step(state, weights)
+                if coupled:
+                    idx = min(rnd - start_round, len(timeline.rounds) - 1)
+                    rn = timeline.rounds[idx]
+                    prev_def = (timeline.rounds[idx - 1].deferred
+                                if idx > 0 else {})
+                    fresh = set(rn.ul_bits) - set(prev_def)
+                    contrib = {cid: 1.0 for cid in rn.arrived}
+                    contrib.update({cid: f for cid, f in rn.partial.items()
+                                    if f > 0.0})
+                    arrived = np.zeros(pods, bool)
+                    stale = np.zeros(pods, np.int32)
+                    fracs = np.ones(pods, np.float32)
+                    snap = np.zeros(pods, bool)
+                    rejoin = np.zeros(pods, bool)
+                    for cid in range(pods):
+                        snap[cid] = cid in fresh
+                        if cid in contrib:
+                            arrived[cid] = True
+                            fracs[cid] = contrib[cid]
+                            stale[cid] = rn.staleness.get(cid, 0)
+                        # every cut pod re-enters fresh — including a
+                        # partial pod whose served fraction was 0 (its
+                        # update is discarded exactly like a drop)
+                        if (cid in contrib or cid in rn.dropped
+                                or cid in rn.partial):
+                            rejoin[cid] = True
+                    state, astate = around(
+                        state, astate, weights, jnp.asarray(arrived),
+                        jnp.asarray(stale), jnp.asarray(fracs),
+                        jnp.asarray(snap), jnp.asarray(rejoin),
+                    )
+                else:
+                    state = round_step(state, weights)
             sync = float(sync_times[min(rnd - start_round,
                                         len(sync_times) - 1)])
             wall_simulated += sync
@@ -203,6 +251,17 @@ def main(argv=None):
                     help="wavelength/OLT segments sharing the CPS uplink")
     ap.add_argument("--cps-gbps", type=float, default=None,
                     help="CPS uplink rate in Gb/s (default uncontended)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="round upload deadline in seconds (stragglers "
+                         "handled per --deadline-policy)")
+    ap.add_argument("--deadline-policy", default="defer",
+                    choices=("defer", "drop", "partial"),
+                    help="what happens to a straggler's unserved bits "
+                         "at the deadline")
+    ap.add_argument("--async-buffer", type=int, default=None,
+                    help="async (FedBuff) mode: aggregate as soon as K "
+                         "uploads complete; stragglers defer with "
+                         "staleness")
     args = ap.parse_args(argv)
     train(
         arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
@@ -210,6 +269,8 @@ def main(argv=None):
         seq_len=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
         policy=args.policy, load=args.load,
         n_pons=args.pons, cps_gbps=args.cps_gbps,
+        deadline_s=args.deadline, deadline_policy=args.deadline_policy,
+        async_buffer=args.async_buffer,
     )
 
 

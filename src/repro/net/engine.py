@@ -612,7 +612,8 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                stream: Optional[_Stream], mode: str, slot_arrays=None,
                max_t: float = 600.0, fill_unfinished: bool = True,
                cap_row: Optional[np.ndarray] = None,
-               cps_cap: Optional[float] = None, n_pons: int = 1):
+               cps_cap: Optional[float] = None, n_pons: int = 1,
+               deadline_row: Optional[np.ndarray] = None):
     """One transfer phase for a (policy-homogeneous) batch of rows.
 
     Rows are ``(case, pon)`` pairs (case-major); ``cap_row`` is each
@@ -630,6 +631,15 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     (missed-deadline bits defer to the next round). ``stream`` is the
     background arrival stream (unused — and may be None — in "bs"
     mode).
+
+    ``deadline_row`` (``(B,)`` float, ``inf`` = no deadline) gives each
+    row its OWN time cutoff: cycles starting at or past a row's
+    deadline grant it nothing (exactly the scalar-deadline rule ``t <
+    deadline``, applied per row), unfinished clients of deadlined rows
+    keep their ``rem``, and ``inf`` rows fall back to the
+    ``max_t``-capped ``fill_unfinished`` behaviour. All ``n_pons``
+    rows of one case must share a deadline (the CPS waterfill couples
+    them).
     """
     B = rem_init.shape[0]
     N = cfg.n_onus
@@ -638,6 +648,12 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     if cap_row is None:
         cap_row = np.full((B,), cfg.line_rate_bps * cyc * cfg.efficiency)
     cap_col = cap_row
+    if deadline_row is None:
+        cap_t = None
+        tmax = max_t
+    else:
+        cap_t = np.where(np.isfinite(deadline_row), deadline_row, max_t)
+        tmax = float(cap_t.max())
 
     rem = rem_init.copy()
     done = ~lay.part | (rem <= 0.0)
@@ -655,7 +671,13 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     n_wait = int(np.count_nonzero(waiting))
     t = 0.0
     k = 0
-    while t < max_t and n_left:
+    cap_cyc = cap_col
+    while t < tmax and n_left:
+        if cap_t is not None:
+            alive = cap_t > t
+            if not np.any(alive[:, None] & lay.part & ~done):
+                break
+            cap_cyc = np.where(alive, cap_col, 0.0)
         if use_bg:
             bg.push(k, stream.row(k))
         if n_wait:
@@ -674,11 +696,11 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
             backlog_onu = fl.backlog_per_onu()
             if mode == "fcfs":
                 if cps_cap is None:
-                    eff = cap_col
+                    eff = cap_cyc
                 else:
                     want = np.minimum(
                         bg.backlog.sum(axis=1) + backlog_onu.sum(axis=1),
-                        cap_col,
+                        cap_cyc,
                     )
                     eff = cps_waterfill(
                         want.reshape(-1, n_pons), cps_cap
@@ -690,7 +712,7 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 )
             else:
                 fl_grants = _slot_grants(slot_arrays, backlog_onu, t,
-                                         cyc, cap_col, N)
+                                         cyc, cap_cyc, N)
                 if cps_cap is not None:
                     want = fl_grants.sum(axis=1)
                     eff = cps_waterfill(
@@ -711,9 +733,9 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 n_left = int(np.count_nonzero(~done & lay.part))
         elif use_bg:
             if cps_cap is None:
-                eff = cap_col
+                eff = cap_cyc
             else:
-                want = np.minimum(bg.backlog.sum(axis=1), cap_col)
+                want = np.minimum(bg.backlog.sum(axis=1), cap_cyc)
                 eff = cps_waterfill(
                     want.reshape(-1, n_pons), cps_cap
                 ).reshape(-1)
@@ -722,7 +744,13 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
         t += cyc
         k += 1
 
-    if fill_unfinished:
+    if cap_t is not None:
+        # per-row deadlines: only deadline-free (inf) rows time out at
+        # ``max_t`` with filled completion times; deadlined rows report
+        # their unserved ``rem`` instead
+        left = lay.part & ~done & ~np.isfinite(deadline_row)[:, None]
+        done_t = np.where(left, t + prop, done_t)
+    elif fill_unfinished:
         left = lay.part & ~done
         done_t = np.where(left, t + prop, done_t)
     return done_t, rem
@@ -799,7 +827,7 @@ def _sweep_topology(cases: Sequence[SweepCase]) -> MultiPonTopology:
 def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                          t_round_hint: float = 10.0,
                          max_t: float = 600.0,
-                         ul_deadline_s: Optional[float] = None,
+                         ul_deadline_s=None,
                          ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
 
@@ -821,7 +849,11 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     ``ul_deadline_s`` cuts the upload phase at a round deadline: clients
     still transmitting then keep their unserved bits in the result's
     ``ul_remaining`` (their ``ul_done`` is NaN) — the multi-round
-    timeline defers those bits to the next round.
+    timeline defers those bits to the next round. A scalar applies to
+    every case (the PR 3 behaviour, bitwise unchanged); a sequence
+    gives each case its OWN deadline (``None``/``inf`` entries =
+    no deadline for that case) — the timeline's folded drop/partial
+    rows and the async mode's per-case k-th-completion cutoffs.
     """
     from repro.net.sim import RoundResult  # lazy: sim imports us lazily
 
@@ -854,7 +886,22 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                      cfg, topo, t_round_hint)
         for c in cases
     ])                                                  # (B, n_pons)
-    ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
+    per_case_dl = isinstance(ul_deadline_s, (list, tuple, np.ndarray))
+    if per_case_dl:
+        dl_case = np.array(
+            [np.inf if d is None else float(d) for d in ul_deadline_s],
+            np.float64,
+        )
+        if dl_case.shape != (B,):
+            raise ValueError(
+                f"per-case ul_deadline_s needs {B} entries; "
+                f"got shape {dl_case.shape}"
+            )
+        dl_row = np.repeat(dl_case, P)
+        ul_max_t = max_t
+    else:
+        dl_case = dl_row = None
+        ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
     no_dl = np.zeros((R, lay.n_clients), bool)
     for b, case in enumerate(cases):
         if case.no_dl_ids:
@@ -938,6 +985,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
             max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
             cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
+            deadline_row=None if dl_row is None else dl_row[fcfs_rows],
         )
     if len(bs_rows):
         per_row = []
@@ -973,6 +1021,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             slot_arrays=slot_arrays, max_t=ul_max_t,
             fill_unfinished=ul_deadline_s is None,
             cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,
+            deadline_row=None if dl_row is None else dl_row[bs_rows],
         )
 
     # ---- assemble --------------------------------------------------------
@@ -1001,8 +1050,14 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 (int(i), float(v))
                 for i, v in zip(ids, ul_rem[r, sel]) if v > 0.0
             )
-        if remaining and ul_deadline_s is not None:
-            sync = ul_deadline_s + case.workload.t_aggregate
+        if per_case_dl:
+            dlb = float(dl_case[b])
+            has_dl = bool(np.isfinite(dl_case[b]))
+        else:
+            dlb = ul_deadline_s
+            has_dl = ul_deadline_s is not None
+        if remaining and has_dl:
+            sync = dlb + case.workload.t_aggregate
         else:
             sync = max(ul.values()) + case.workload.t_aggregate
         results.append(RoundResult(
@@ -1014,6 +1069,6 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             compute_bound=max(rd.values()),
             load=case.load,
             slice_spec=specs.get(b),
-            ul_remaining=remaining if ul_deadline_s is not None else None,
+            ul_remaining=remaining if has_dl else None,
         ))
     return results

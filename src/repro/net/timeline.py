@@ -8,31 +8,58 @@ engine one round at a time from a Python loop, rebuilding layout and
 queue state every round. This module advances the whole training
 timeline in one call:
 
-* **Folded mode** (no deadlines): rounds are independent given their
-  start times, so the round axis folds into the engine's batch axis —
-  all R rounds of all B cases run as ONE stacked simulation. One
-  ``_Layout`` build, one ``_BgQueues``/``_FLQueues`` allocation carried
-  across the whole timeline, one cycle loop whose per-cycle Python cost
-  is amortised over R·B rows instead of B. The counter-based arrival
-  sampler (``repro.kernels.traffic``) keys round ``r``'s stream by
+* **Folded mode** (rounds independent given their start times): the
+  round axis folds into the engine's batch axis — all R rounds of all
+  B cases run as ONE stacked simulation. One ``_Layout`` build, one
+  ``_BgQueues``/``_FLQueues`` allocation carried across the whole
+  timeline, one cycle loop whose per-cycle Python cost is amortised
+  over R·B rows instead of B. The counter-based arrival sampler
+  (``repro.kernels.traffic``) keys round ``r``'s stream by
   ``(seed, phase, r)``, so every row addresses its own arrivals with no
-  sequential draw state.
-* **Sequential mode** (round deadlines): a client still uploading at the
-  deadline *defers* its remaining update bits to the next round (it
-  skips the next model download and resumes the stale upload — array
-  state carried between rounds), which couples consecutive rounds; the
-  engine then advances round by round, still batched over cases.
+  sequential draw state. Legal whenever nothing couples consecutive
+  rounds: no deadline at all, or ``deadline_policy`` in
+  ``{"drop", "partial"}`` (a straggler's unserved bits never cross the
+  round boundary — folded rows carry per-row deadlines).
+* **Sequential mode** (``deadline_policy="defer"``): a client still
+  uploading at the deadline *defers* its remaining update bits to the
+  next round (it skips the next model download and resumes the stale
+  upload — array state carried between rounds), which couples
+  consecutive rounds; the engine then advances round by round, still
+  batched over cases.
+* **Async mode** (``buffer_k``, FedBuff semantics): there is no fixed
+  deadline — aggregation fires as soon as ``buffer_k`` pending uploads
+  complete. Each round runs twice on the engine: a free-running pass
+  finds the k-th completion time ``t_k`` (causality makes the prefix
+  before ``t_k`` identical with or without a cutoff), then a deadline
+  pass at ``t_k`` yields the exact unserved bits of the stragglers,
+  which defer FedBuff-style. Per-client *staleness* ``τ_i`` (rounds
+  elapsed since the client downloaded its model) is reported per round
+  so the learning layer can weight stale updates (e.g. ``1/sqrt(1+τ)``).
+
+Deadline policies (``TimelineSchedule.deadline_policy``):
+
+* ``"defer"`` (default, the PR 3/4 behaviour — bitwise unchanged): the
+  straggler keeps its unserved bits and resumes next round as a
+  zero-compute carrier.
+* ``"drop"``: the straggler's unserved bits are discarded at the
+  deadline (its served bits were wasted wire time); the client
+  re-enters fresh next round.
+* ``"partial"``: the *served* fraction counts as a usable partial
+  update (``TimelineRound.partial`` maps client → served fraction);
+  the unserved remainder is discarded and the client re-enters fresh.
 
 ``simulate_timeline_reference`` is the parity oracle: an explicit
 per-round Python loop over the *cycle-by-cycle dict simulator*
 (``backend="reference"``), fed the engine's exact counter streams via
-``repro.net.traffic.CounterStream``. Tests require sync times and
-per-round served bits to agree at rtol 1e-6, including elastic
-membership and deadline deferral.
+``repro.net.traffic.CounterStream`` — extended with the same two-pass
+rule for async rounds and the same policy folding. Tests require sync
+times, per-round served bits, staleness and policy outcomes to agree
+at rtol 1e-6 for all three policies and async arrivals, including
+elastic membership and multi-PON topologies.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,6 +68,7 @@ from repro.net.engine import SweepCase, simulate_round_sweep
 from repro.net.sim import FLRoundWorkload, RoundResult
 
 __all__ = [
+    "DEADLINE_POLICIES",
     "TimelineSchedule",
     "TimelineRound",
     "TimelineResult",
@@ -48,6 +76,8 @@ __all__ = [
     "simulate_timeline_per_round",
     "simulate_timeline_reference",
 ]
+
+DEADLINE_POLICIES = ("defer", "drop", "partial")
 
 
 @dataclass(frozen=True)
@@ -66,19 +96,40 @@ class TimelineSchedule:
 
     ``deadline_s``: optional round deadline(s), scalar or ``(n_rounds,)``
     — the upload phase is cut at the deadline and unfinished clients
-    carry their remaining bits into the next round.
+    are handled per ``deadline_policy``.
+
+    ``deadline_policy``: what happens to a straggler's unserved bits at
+    the deadline — ``"defer"`` (carry to the next round, the default),
+    ``"drop"`` (discard) or ``"partial"`` (discard, but report the
+    served fraction as a usable partial update).
+
+    ``buffer_k``: async (FedBuff) mode — ignore ``deadline_s`` (must be
+    None) and fire each round's aggregation as soon as ``buffer_k``
+    pending uploads complete; stragglers defer with staleness.
+
+    All array inputs are normalised and defensively copied once at
+    construction: later mutation of the caller's arrays cannot desync
+    the folded engine from the sequential/reference loops (which would
+    otherwise re-read the caller's memory at different times).
     """
 
     n_rounds: int
     membership: Optional[np.ndarray] = None
     m_ud_bits: Optional[np.ndarray] = None
     deadline_s: Optional[object] = None
+    deadline_policy: str = "defer"
+    buffer_k: Optional[int] = None
 
     def __post_init__(self):
         if self.n_rounds < 1:
             raise ValueError("n_rounds must be >= 1")
+        if self.deadline_policy not in DEADLINE_POLICIES:
+            raise ValueError(
+                f"unknown deadline_policy {self.deadline_policy!r}; "
+                f"have {DEADLINE_POLICIES}"
+            )
         if self.membership is not None:
-            m = np.asarray(self.membership, bool)
+            m = np.array(self.membership, dtype=bool)
             if m.ndim != 2 or m.shape[0] != self.n_rounds:
                 raise ValueError(
                     f"membership must be (n_rounds, n_clients); "
@@ -86,30 +137,57 @@ class TimelineSchedule:
                 )
             object.__setattr__(self, "membership", m)
         if self.deadline_s is not None:
-            d = np.asarray(self.deadline_s, np.float64).reshape(-1)
+            d = np.array(self.deadline_s, dtype=np.float64).reshape(-1)
             if d.size not in (1, self.n_rounds):
                 raise ValueError(
                     f"deadline_s must be scalar or (n_rounds,); "
                     f"got {d.size} values for {self.n_rounds} rounds"
                 )
+            object.__setattr__(self, "deadline_s", d)
+        elif self.deadline_policy != "defer":
+            raise ValueError(
+                f"deadline_policy={self.deadline_policy!r} needs "
+                "deadline_s (without a deadline nothing is ever cut)"
+            )
         if self.m_ud_bits is not None:
-            m = np.asarray(self.m_ud_bits, np.float64)
+            m = np.array(self.m_ud_bits, dtype=np.float64)
             if m.shape[0] != self.n_rounds:
                 raise ValueError(
                     f"m_ud_bits must lead with n_rounds="
                     f"{self.n_rounds}; got shape {m.shape}"
                 )
+            object.__setattr__(self, "m_ud_bits", m)
+        if self.buffer_k is not None:
+            if int(self.buffer_k) < 1:
+                raise ValueError("buffer_k must be >= 1")
+            if self.deadline_s is not None:
+                raise ValueError(
+                    "async mode (buffer_k) fires at the k-th arrival; "
+                    "it cannot be combined with deadline_s"
+                )
+            object.__setattr__(self, "buffer_k", int(self.buffer_k))
+
+    @property
+    def asynchronous(self) -> bool:
+        return self.buffer_k is not None
+
+    @property
+    def couples_rounds(self) -> bool:
+        """True when state crosses round boundaries (no folding)."""
+        return self.asynchronous or (
+            self.deadline_s is not None and self.deadline_policy == "defer"
+        )
 
     def deadline(self, r: int) -> Optional[float]:
         if self.deadline_s is None:
             return None
-        d = np.asarray(self.deadline_s, np.float64).reshape(-1)
+        d = self.deadline_s
         return float(d[r] if d.size > 1 else d[0])
 
     def round_m_ud(self, r: int, j: int, default: float) -> float:
         if self.m_ud_bits is None:
             return default
-        m = np.asarray(self.m_ud_bits, np.float64)
+        m = self.m_ud_bits
         return float(m[r] if m.ndim == 1 else m[r, j])
 
 
@@ -125,6 +203,14 @@ class TimelineRound:
     arrived: List[int]              # clients whose update completed
     deferred: Dict[int, float]      # bits carried into the next round
     result: Optional[RoundResult]   # None for empty (no-client) rounds
+    # rounds elapsed since each arrived client downloaded its model
+    # (0 unless the client deferred across rounds — defer/async modes)
+    staleness: Dict[int, int] = field(default_factory=dict)
+    # deadline_policy="drop": bits discarded at the deadline per client
+    dropped: Dict[int, float] = field(default_factory=dict)
+    # deadline_policy="partial": served fraction (usable partial update)
+    # per client cut at the deadline
+    partial: Dict[int, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -175,27 +261,73 @@ def _round_setup(case: SweepCase, schedule: TimelineSchedule, r: int,
 
 def _round_view(r: int, t_start: float, result: Optional[RoundResult],
                 rem_start: Dict[int, float], t_aggregate: float,
+                policy: str = "defer",
+                entry: Optional[Dict[int, int]] = None,
                 ) -> Tuple[TimelineRound, Dict[int, float]]:
-    """Fold one round's RoundResult into a TimelineRound + next carry."""
+    """Fold one round's RoundResult into a TimelineRound + next carry.
+
+    ``entry`` maps each pending client to the round it downloaded its
+    model (maintained by the drivers); arrived clients report staleness
+    ``r - entry``.  A ``None`` result is only legal for a round with no
+    pending clients — carriers must always be routed into a non-empty
+    round, or their bits would silently vanish.
+    """
     if result is None:
+        if rem_start:
+            raise RuntimeError(
+                f"round {r} produced no simulation result but has "
+                f"pending clients {sorted(rem_start)}: carriers must be "
+                "routed into a non-empty round, not dropped"
+            )
         rnd = TimelineRound(
             round_index=r, sync_time=t_aggregate, t_start=t_start,
             t_end=t_start + t_aggregate, ul_bits={}, arrived=[],
             deferred={}, result=None,
         )
         return rnd, {}
-    deferred = dict(result.ul_remaining or {})
+    remaining = dict(result.ul_remaining or {})
     ul_bits = {
-        cid: rem_start[cid] - deferred.get(cid, 0.0)
+        cid: rem_start[cid] - remaining.get(cid, 0.0)
         for cid in rem_start
     }
-    arrived = sorted(cid for cid in rem_start if cid not in deferred)
+    arrived = sorted(cid for cid in rem_start if cid not in remaining)
+    staleness = {
+        cid: (r - entry.get(cid, r)) if entry is not None else 0
+        for cid in arrived
+    }
+    deferred: Dict[int, float] = {}
+    dropped: Dict[int, float] = {}
+    partial: Dict[int, float] = {}
+    if policy == "defer":
+        deferred = remaining
+    elif policy == "drop":
+        dropped = remaining
+    elif policy == "partial":
+        partial = {cid: ul_bits[cid] / rem_start[cid] for cid in remaining}
+    else:  # pragma: no cover - schedule validation rejects earlier
+        raise ValueError(f"unknown deadline_policy {policy!r}")
     rnd = TimelineRound(
         round_index=r, sync_time=result.sync_time, t_start=t_start,
         t_end=t_start + result.sync_time, ul_bits=ul_bits,
         arrived=arrived, deferred=deferred, result=result,
+        staleness=staleness, dropped=dropped, partial=partial,
     )
     return rnd, deferred
+
+
+def _kth_completion(result: RoundResult, rem_start: Dict[int, float],
+                    buffer_k: int) -> float:
+    """The async cutoff: completion time of the k-th pending upload.
+
+    Zero-bit uploads complete at the round start (their ``ul_done`` is
+    NaN — nothing was ever queued). Fewer than k pending clients fall
+    back to the last completion (a plain full round).
+    """
+    times = sorted(
+        0.0 if np.isnan(result.ul_done[cid]) else float(result.ul_done[cid])
+        for cid in rem_start
+    )
+    return times[min(buffer_k, len(times)) - 1]
 
 
 def _validate(cases: Sequence[SweepCase], schedule: TimelineSchedule):
@@ -222,57 +354,112 @@ def _validate(cases: Sequence[SweepCase], schedule: TimelineSchedule):
 # ---------------------------------------------------------------------------
 
 
-def _sequential(cfg, cases, schedule, t_round_hint, max_t):
-    """Round-by-round engine advance, carrying deferred bits (the only
-    legal order under deadlines; also the PR 2 per-round loop that the
-    folded mode is benchmarked against)."""
+def _build_rows(cases, schedule, r, carries):
+    """Per-round SweepCase rows + alignment metadata for a batch."""
+    row_cases = []
+    row_meta = []
+    for b, case in enumerate(cases):
+        clients_r, no_dl, rem_start = _round_setup(
+            case, schedule, r, carries[b]
+        )
+        if not clients_r:
+            row_meta.append((b, None, rem_start))
+            continue
+        wl = FLRoundWorkload(
+            clients=clients_r,
+            model_bits=case.workload.model_bits,
+            t_aggregate=case.workload.t_aggregate,
+        )
+        row_meta.append((b, len(row_cases), rem_start))
+        row_cases.append(SweepCase(
+            workload=wl, load=case.load, policy=case.policy,
+            seed=case.seed, stream_round=r, no_dl_ids=no_dl,
+            topology=case.topology,
+        ))
+    return row_cases, row_meta
+
+
+def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
+                    deadline_fn):
+    """The shared round-by-round driver: build rows, resolve each
+    round's deadline(s) via ``deadline_fn(r, row_cases, row_meta)``
+    (a scalar, or a per-row list), advance the engine, fold results
+    and carry deferred state/entry rounds forward."""
     B = len(cases)
     carries: List[Dict[int, float]] = [{} for _ in range(B)]
+    entries: List[Dict[int, int]] = [{} for _ in range(B)]
     t_now = np.zeros(B)
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
                           rounds=[]) for c in cases]
     for r in range(schedule.n_rounds):
-        row_cases = []
-        row_meta = []
-        for b, case in enumerate(cases):
-            clients_r, no_dl, rem_start = _round_setup(
-                case, schedule, r, carries[b]
-            )
-            if not clients_r:
-                row_meta.append((b, None, rem_start))
-                continue
-            wl = FLRoundWorkload(
-                clients=clients_r,
-                model_bits=case.workload.model_bits,
-                t_aggregate=case.workload.t_aggregate,
-            )
-            row_meta.append((b, len(row_cases), rem_start))
-            row_cases.append(SweepCase(
-                workload=wl, load=case.load, policy=case.policy,
-                seed=case.seed, stream_round=r, no_dl_ids=no_dl,
-                topology=case.topology,
-            ))
+        row_cases, row_meta = _build_rows(cases, schedule, r, carries)
+        for b, _, rem_start in row_meta:
+            for cid in rem_start:
+                entries[b].setdefault(cid, r)
         results = simulate_round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
-            ul_deadline_s=schedule.deadline(r),
+            ul_deadline_s=deadline_fn(r, row_cases, row_meta),
         ) if row_cases else []
         for b, ridx, rem_start in row_meta:
             res = results[ridx] if ridx is not None else None
             rnd, carry = _round_view(
                 r, float(t_now[b]), res, rem_start,
-                cases[b].workload.t_aggregate,
+                cases[b].workload.t_aggregate, policy, entries[b],
             )
             out[b].rounds.append(rnd)
             carries[b] = carry
+            entries[b] = {cid: entries[b][cid] for cid in carry}
             t_now[b] += rnd.sync_time
     return out
 
 
+def _sequential(cfg, cases, schedule, t_round_hint, max_t):
+    """Round-by-round engine advance, carrying deferred bits (the only
+    legal order under defer deadlines; also the PR 2 per-round loop that
+    the folded mode is benchmarked against)."""
+    return _advance_rounds(
+        cfg, cases, schedule, t_round_hint, max_t,
+        schedule.deadline_policy,
+        lambda r, row_cases, row_meta: schedule.deadline(r),
+    )
+
+
+def _async(cfg, cases, schedule, t_round_hint, max_t):
+    """FedBuff-style async rounds: each round is cut at the completion
+    time of the ``buffer_k``-th pending upload (two engine passes — a
+    free-running pass locates ``t_k``, a deadline pass at ``t_k``
+    yields the stragglers' exact unserved bits), and stragglers defer
+    with staleness. Cycles whose start precedes ``t_k`` complete, so
+    the round's served bits reflect the cutoff at cycle granularity —
+    the same rule the reference oracle applies.
+    """
+    k = schedule.buffer_k
+
+    def deadline_fn(r, row_cases, row_meta):
+        free = simulate_round_sweep(
+            cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
+        )
+        deadlines: List[Optional[float]] = [None] * len(row_cases)
+        for _, ridx, rem_start in row_meta:
+            if ridx is not None:
+                deadlines[ridx] = _kth_completion(
+                    free[ridx], rem_start, k
+                )
+        return deadlines
+
+    return _advance_rounds(
+        cfg, cases, schedule, t_round_hint, max_t, "defer", deadline_fn,
+    )
+
+
 def _folded(cfg, cases, schedule, t_round_hint, max_t):
     """The whole timeline as ONE stacked simulation: the round axis is
-    folded into the engine batch axis (rounds are independent given
-    their start times when nothing defers)."""
+    folded into the engine batch axis (legal whenever rounds are
+    independent given their start times — no deadline, or drop/partial
+    policies whose stragglers never carry state forward; each row then
+    runs under its own round's deadline)."""
     rows = []
+    row_deadlines: List[Optional[float]] = []
     meta = []            # (b, r, rem_start, row_index or None)
     for b, case in enumerate(cases):
         for r in range(schedule.n_rounds):
@@ -291,8 +478,11 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t):
                 seed=case.seed, stream_round=r,
                 topology=case.topology,
             ))
+            row_deadlines.append(schedule.deadline(r))
+    has_deadline = schedule.deadline_s is not None
     results = simulate_round_sweep(
         cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
+        ul_deadline_s=row_deadlines if has_deadline else None,
     ) if rows else []
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
                           rounds=[]) for c in cases]
@@ -301,7 +491,7 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t):
         res = results[ridx] if ridx is not None else None
         rnd, _ = _round_view(
             r, float(t_now[b]), res, rem_start,
-            cases[b].workload.t_aggregate,
+            cases[b].workload.t_aggregate, schedule.deadline_policy,
         )
         out[b].rounds.append(rnd)
         t_now[b] += rnd.sync_time
@@ -316,18 +506,29 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     """Advance the full multi-round timeline for every case.
 
     ``mode="auto"`` folds the round axis into the batch (one stacked
-    simulation) when the schedule has no deadlines and falls back to the
-    sequential carry loop otherwise; ``"folded"``/``"sequential"`` force
-    a path (parity tests check they agree when both are legal).
+    simulation) when nothing couples consecutive rounds — no deadline,
+    or ``deadline_policy`` in ``{"drop", "partial"}`` — and falls back
+    to the sequential carry loop for defer deadlines;
+    ``schedule.buffer_k`` selects the async (FedBuff) driver.
+    ``"folded"``/``"sequential"`` force a path (parity tests check they
+    agree when both are legal).
     """
     cases = _validate(cases, schedule)
+    if schedule.asynchronous:
+        if mode == "folded":
+            raise ValueError(
+                "async rounds couple consecutive rounds (stragglers "
+                "defer); folded mode is unavailable"
+            )
+        return _async(cfg, cases, schedule, t_round_hint, max_t)
     if mode == "auto":
-        mode = "sequential" if schedule.deadline_s is not None else "folded"
+        mode = "sequential" if schedule.couples_rounds else "folded"
     if mode == "folded":
-        if schedule.deadline_s is not None:
+        if schedule.couples_rounds:
             raise ValueError(
                 "deadline deferral couples consecutive rounds; folded "
-                "mode requires a schedule without deadlines"
+                "mode requires a schedule without deferred state "
+                "(no deadline, or drop/partial policies)"
             )
         return _folded(cfg, cases, schedule, t_round_hint, max_t)
     if mode == "sequential":
@@ -342,8 +543,11 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
                                 ) -> List[TimelineResult]:
     """The PR 2 per-round loop: one engine call per round, queue state
     rebuilt every round. Identical results to ``simulate_timeline_sweep``
-    (same streams); kept as the benchmark baseline."""
+    (same streams); kept as the benchmark baseline. Async schedules run
+    the (inherently per-round) two-pass async driver."""
     cases = _validate(cases, schedule)
+    if schedule.asynchronous:
+        return _async(cfg, cases, schedule, t_round_hint, max_t)
     return _sequential(cfg, cases, schedule, t_round_hint, max_t)
 
 
@@ -363,7 +567,9 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
     it the engine's counter-based arrival streams
     (``CounterStream.source``), so the timeline engine must reproduce
     its sync times and per-round bits exactly (rtol 1e-6) — including
-    elastic membership and deadline deferral.
+    elastic membership, all three deadline policies and async rounds
+    (the same two-pass k-th-completion rule, on fresh stream cursors
+    per pass).
     """
     from repro.kernels.traffic.ops import make_stream_key
     from repro.net.engine import _case_bg_rate
@@ -372,9 +578,11 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
     from repro.net.traffic import CounterStream
 
     cases = _validate(cases, schedule)
+    policy = schedule.deadline_policy
     out = []
     for case in cases:
         carry: Dict[int, float] = {}
+        entry: Dict[int, int] = {}
         t_now = 0.0
         res = TimelineResult(policy=case.policy, load=case.load,
                              seed=case.seed, rounds=[])
@@ -382,10 +590,12 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
             clients_r, no_dl, rem_start = _round_setup(
                 case, schedule, r, carry
             )
+            for cid in rem_start:
+                entry.setdefault(cid, r)
             if not clients_r:
                 rnd, carry = _round_view(
                     r, t_now, None, rem_start,
-                    case.workload.t_aggregate,
+                    case.workload.t_aggregate, policy, entry,
                 )
                 res.rounds.append(rnd)
                 t_now += rnd.sync_time
@@ -395,46 +605,55 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
                 model_bits=case.workload.model_bits,
                 t_aggregate=case.workload.t_aggregate,
             )
-            if case.topology is not None and not case.topology.trivial:
-                # the cycle-by-cycle multi-PON oracle keys its own
-                # (seed, phase, round, pon) counter streams
-                result = simulate_multi_pon_round(
-                    cfg, case.topology, wl, case.load, case.policy,
-                    seed=case.seed, t_round_hint=t_round_hint,
-                    max_t=max_t, ul_deadline_s=schedule.deadline(r),
-                    no_dl_ids=no_dl, stream_round=r,
+
+            def run_ref(deadline):
+                """One reference round under ``deadline`` — fresh
+                stream cursors per call, so the async two-pass replays
+                the identical arrival process."""
+                if case.topology is not None and not case.topology.trivial:
+                    # the cycle-by-cycle multi-PON oracle keys its own
+                    # (seed, phase, round, pon) counter streams
+                    return simulate_multi_pon_round(
+                        cfg, case.topology, wl, case.load, case.policy,
+                        seed=case.seed, t_round_hint=t_round_hint,
+                        max_t=max_t, ul_deadline_s=deadline,
+                        no_dl_ids=no_dl, stream_round=r,
+                    )
+                row = SweepCase(workload=wl, load=case.load,
+                                policy=case.policy, seed=case.seed)
+                per_onu = (_case_bg_rate(row, cfg, t_round_hint)
+                           / cfg.n_onus)
+                streams = [
+                    CounterStream(
+                        make_stream_key(case.seed, phase, r), per_onu,
+                        cfg.cycle_time_s, cfg.n_onus,
+                        burst_packets=cfg.bg_burst_packets,
+                    )
+                    for phase in (0, 1)
+                ]
+                return simulate_round(
+                    cfg, wl, case.load, case.policy, seed=case.seed,
+                    t_round_hint=t_round_hint, backend="reference",
+                    _dl_sources=[streams[0].source(i)
+                                 for i in range(cfg.n_onus)],
+                    _ul_sources=[streams[1].source(i)
+                                 for i in range(cfg.n_onus)],
+                    ul_deadline_s=deadline,
+                    no_dl_ids=no_dl,
                 )
-                rnd, carry = _round_view(
-                    r, t_now, result, rem_start,
-                    case.workload.t_aggregate,
+
+            if schedule.asynchronous:
+                free = run_ref(None)
+                result = run_ref(
+                    _kth_completion(free, rem_start, schedule.buffer_k)
                 )
-                res.rounds.append(rnd)
-                t_now += rnd.sync_time
-                continue
-            row = SweepCase(workload=wl, load=case.load,
-                            policy=case.policy, seed=case.seed)
-            per_onu = _case_bg_rate(row, cfg, t_round_hint) / cfg.n_onus
-            streams = [
-                CounterStream(
-                    make_stream_key(case.seed, phase, r), per_onu,
-                    cfg.cycle_time_s, cfg.n_onus,
-                    burst_packets=cfg.bg_burst_packets,
-                )
-                for phase in (0, 1)
-            ]
-            result = simulate_round(
-                cfg, wl, case.load, case.policy, seed=case.seed,
-                t_round_hint=t_round_hint, backend="reference",
-                _dl_sources=[streams[0].source(i)
-                             for i in range(cfg.n_onus)],
-                _ul_sources=[streams[1].source(i)
-                             for i in range(cfg.n_onus)],
-                ul_deadline_s=schedule.deadline(r),
-                no_dl_ids=no_dl,
-            )
+            else:
+                result = run_ref(schedule.deadline(r))
             rnd, carry = _round_view(
-                r, t_now, result, rem_start, case.workload.t_aggregate
+                r, t_now, result, rem_start,
+                case.workload.t_aggregate, policy, entry,
             )
+            entry = {cid: entry[cid] for cid in carry}
             res.rounds.append(rnd)
             t_now += rnd.sync_time
         out.append(res)

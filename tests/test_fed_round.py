@@ -183,3 +183,231 @@ def test_cosim_config_derives_bits_from_stepfns():
     assert cc.model_bits == float(stepfns.fed_update_bits(cfg, "none"))
     assert cc.upload_bits == float(stepfns.fed_update_bits(cfg, "int8"))
     assert 0 < cc.upload_bits < cc.model_bits
+
+
+class TestAsyncFedBuff:
+    """Buffered staleness-weighted (FedBuff) rounds on the pod axis."""
+
+    def _setup(self, fed_state):
+        cfg, state = fed_state
+        # a true global: every pod synced to the same rows (the module
+        # fixture's params are pod-diverged, which is NOT a valid
+        # post-download state for refs/global)
+        synced = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[0][None], l.shape),
+            state.params,
+        )
+        astate = stepfns.init_async_state(state._replace(params=synced))
+        # per-pod local training moves the params off the global
+        leaves, treedef = jax.tree.flatten(synced)
+        moved = [
+            l + (0.02 * jax.random.normal(jax.random.PRNGKey(100 + i),
+                                          l.shape)).astype(l.dtype)
+            for i, l in enumerate(leaves)
+        ]
+        return cfg, state._replace(
+            params=jax.tree.unflatten(treedef, moved)
+        ), astate
+
+    def test_all_arrived_fresh_equals_fedavg_delta(self, fed_state):
+        """With every pod arrived at staleness 0 and server_lr 1, the
+        FedBuff merge is exactly FedAvg expressed in delta form."""
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.array([1.0, 3.0])
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+        ones = jnp.ones((N_PODS,))
+        out, astate2 = step(
+            state, astate, weights, jnp.ones(N_PODS, bool),
+            jnp.zeros(N_PODS, jnp.int32), ones,
+            jnp.ones(N_PODS, bool), jnp.ones(N_PODS, bool),
+        )
+        _assert_pods_synced(out.params)
+        expect = jax.jit(stepfns.make_fed_round_step(cfg))(state, weights)
+        for a, b in zip(jax.tree.leaves(out.params),
+                        jax.tree.leaves(expect.params)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=1e-5,
+            )
+
+    def test_straggler_keeps_params_and_misses_merge(self, fed_state):
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.ones((N_PODS,))
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+        arrived = jnp.array([True, False])
+        out, astate2 = step(
+            state, astate, weights, arrived,
+            jnp.zeros(N_PODS, jnp.int32), jnp.ones((N_PODS,)),
+            jnp.ones(N_PODS, bool), arrived,
+        )
+        p_new = jax.tree.leaves(out.params)[0]
+        p_old = jax.tree.leaves(state.params)[0]
+        g_new = jax.tree.leaves(astate2.global_params)[0]
+        # straggler pod 1 keeps its local params and its old ref
+        np.testing.assert_array_equal(np.asarray(p_new[1]),
+                                      np.asarray(p_old[1]))
+        r_old = jax.tree.leaves(astate.refs)[0]
+        r_new = jax.tree.leaves(astate2.refs)[0]
+        np.testing.assert_array_equal(np.asarray(r_new[1]),
+                                      np.asarray(r_old[1]))
+        # arrived pod 0 resynced to the new global (params and ref)
+        np.testing.assert_array_equal(np.asarray(p_new[0]),
+                                      np.asarray(g_new[0]))
+        np.testing.assert_array_equal(np.asarray(r_new[0]),
+                                      np.asarray(g_new[0]))
+        # global moved by pod 0's full delta (only contributor)
+        g_old = jax.tree.leaves(astate.global_params)[0]
+        delta0 = np.asarray(p_old[0], np.float32) - np.asarray(
+            g_old[0], np.float32
+        )
+        np.testing.assert_allclose(
+            np.asarray(g_new[0], np.float32),
+            np.asarray(g_old[0], np.float32) + delta0, atol=1e-5,
+        )
+
+    def test_staleness_discounts_contribution(self, fed_state):
+        """A stale pod's delta moves the global less than a fresh one's
+        — and the weighting matches 1/sqrt(1+tau)."""
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.ones((N_PODS,))
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+
+        def merge(stale):
+            out, ast = step(
+                state, astate, weights, jnp.ones(N_PODS, bool),
+                jnp.asarray(stale, jnp.int32), jnp.ones((N_PODS,)),
+                jnp.ones(N_PODS, bool), jnp.ones(N_PODS, bool),
+            )
+            return jax.tree.leaves(ast.global_params)[0][0]
+
+        g0 = np.asarray(merge([0, 0]), np.float32)
+        g3 = np.asarray(merge([0, 3]), np.float32)
+        g_old = np.asarray(jax.tree.leaves(astate.global_params)[0][0],
+                           np.float32)
+        p = jax.tree.leaves(state.params)[0]
+        d0 = np.asarray(p[0], np.float32) - g_old
+        d1 = np.asarray(p[1], np.float32) - g_old
+        np.testing.assert_allclose(g0, g_old + (d0 + d1) / 2.0, atol=1e-5)
+        # data weights mix relatively (1/2 each); staleness discounts
+        # the stale pod's share absolutely
+        s = 1.0 / np.sqrt(4.0)
+        np.testing.assert_allclose(
+            g3, g_old + (d0 + s * d1) / 2.0, atol=1e-5
+        )
+
+    def test_partial_fraction_scales_weight(self, fed_state):
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.ones((N_PODS,))
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+        out, ast = step(
+            state, astate, weights, jnp.ones(N_PODS, bool),
+            jnp.zeros(N_PODS, jnp.int32), jnp.array([1.0, 0.5]),
+            jnp.ones(N_PODS, bool), jnp.ones(N_PODS, bool),
+        )
+        g_old = np.asarray(jax.tree.leaves(astate.global_params)[0][0],
+                           np.float32)
+        p = jax.tree.leaves(state.params)[0]
+        d0 = np.asarray(p[0], np.float32) - g_old
+        d1 = np.asarray(p[1], np.float32) - g_old
+        g = np.asarray(jax.tree.leaves(ast.global_params)[0][0],
+                       np.float32)
+        # the half-served update contributes half its (relative) share
+        np.testing.assert_allclose(
+            g, g_old + (d0 + 0.5 * d1) / 2.0, atol=1e-5
+        )
+
+    def test_no_arrivals_is_noop_on_global(self, fed_state):
+        cfg, state, astate = self._setup(fed_state)
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+        out, ast = step(
+            state, astate, jnp.ones((N_PODS,)),
+            jnp.zeros(N_PODS, bool), jnp.zeros(N_PODS, jnp.int32),
+            jnp.ones((N_PODS,)), jnp.ones(N_PODS, bool),
+            jnp.zeros(N_PODS, bool),
+        )
+        for a, b in zip(jax.tree.leaves(astate.global_params),
+                        jax.tree.leaves(ast.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(out.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_snapshot_freezes_inflight_payload(self, fed_state):
+        """Training that happens after the snapshot must not leak into
+        the pending upload: merging the straggler later applies the
+        snapshotted delta, not the drifted params."""
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.ones((N_PODS,))
+        step = jax.jit(stepfns.make_async_round_step(cfg))
+        none = jnp.zeros(N_PODS, bool)
+        # round 1: snap both pods, nobody arrives
+        _, ast1 = step(
+            state, astate, weights, none, jnp.zeros(N_PODS, jnp.int32),
+            jnp.ones((N_PODS,)), jnp.ones(N_PODS, bool), none,
+        )
+        # pod params drift afterwards (local steps while uploading)
+        drifted = state._replace(params=jax.tree.map(
+            lambda l: l + jnp.asarray(1.0, l.dtype), state.params
+        ))
+        # round 2: pod 1 arrives; no new snapshot
+        arrived = jnp.array([False, True])
+        _, ast2 = step(
+            drifted, ast1, weights, arrived,
+            jnp.array([1, 1], jnp.int32), jnp.ones((N_PODS,)),
+            none, arrived,
+        )
+        g_old = np.asarray(jax.tree.leaves(astate.global_params)[0][0],
+                           np.float32)
+        p = jax.tree.leaves(state.params)[0]
+        d1 = np.asarray(p[1], np.float32) - g_old
+        # lone arrival at staleness 1: the SNAPSHOTTED delta applies,
+        # discounted absolutely by 1/sqrt(2) — not the drifted params,
+        # and not the full delta
+        s = 1.0 / np.sqrt(2.0)
+        g = np.asarray(jax.tree.leaves(ast2.global_params)[0][0],
+                       np.float32)
+        np.testing.assert_allclose(g, g_old + s * d1, atol=1e-5)
+
+    def test_error_feedback_masks_stragglers(self, fed_state):
+        cfg, state, astate = self._setup(fed_state)
+        weights = jnp.ones((N_PODS,))
+        step = jax.jit(stepfns.make_async_round_step(
+            cfg, compress="topk", error_feedback=True
+        ))
+        res0 = stepfns.init_round_residuals(state)
+        arrived = jnp.array([True, False])
+        out, ast, res1 = step(
+            state, astate, weights, arrived,
+            jnp.zeros(N_PODS, jnp.int32), jnp.ones((N_PODS,)),
+            jnp.ones(N_PODS, bool), arrived, res0,
+        )
+        r = jax.tree.leaves(res1)[0]
+        assert float(jnp.abs(r[0]).max()) > 0.0
+        assert float(jnp.abs(r[1]).max()) == 0.0
+
+    def test_host_mirror_parity(self, fed_state):
+        """fedops.fedbuff_pods == fl.aggregation.fedbuff_merge on the
+        same deltas/weights/staleness."""
+        from repro.dist import fedops
+        from repro.fl.aggregation import fedbuff_merge
+
+        _, state = fed_state
+        g_leaf = jax.tree.leaves(state.params)[0][0].astype(jnp.float32)
+        deltas = [
+            {"w": 0.1 * jax.random.normal(jax.random.PRNGKey(i),
+                                          g_leaf.shape)}
+            for i in range(N_PODS)
+        ]
+        glob = {"w": g_leaf}
+        host = fedbuff_merge(glob, deltas, [1.0, 2.0], [0, 2])
+        pend = {"w": jnp.stack([d["w"] for d in deltas])}
+        gp = {"w": jnp.broadcast_to(g_leaf[None],
+                                    (N_PODS,) + g_leaf.shape)}
+        pods = fedops.fedbuff_pods(
+            pend, gp, jnp.array([1.0, 2.0]), jnp.ones(N_PODS, bool),
+            jnp.array([0, 2]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(host["w"]), np.asarray(pods["w"][0]), rtol=1e-6,
+            atol=1e-6,
+        )
