@@ -1,0 +1,44 @@
+"""Environment provenance stamped into benchmark artifacts.
+
+Every BENCH_*.json payload carries a ``meta`` block (jax version,
+backend, devices, host platform) so a number can be traced to the
+machine and stack that produced it.  The regression gate
+(``benchmarks/compare.py``) extracts only throughput metrics and
+ignores the block entirely — metadata never participates in
+comparisons.
+"""
+from __future__ import annotations
+
+import platform
+
+
+def env_metadata() -> dict:
+    """jax/backend/device + host info, best-effort (never raises)."""
+    meta = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+    }
+    try:
+        import jax
+
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        devices = jax.devices()
+        meta["device_count"] = len(devices)
+        meta["device_kind"] = devices[0].device_kind if devices else None
+    except Exception as e:  # pragma: no cover - jax-less environments
+        meta["jax_error"] = f"{type(e).__name__}: {e}"
+    try:
+        import numpy as np
+
+        meta["numpy"] = np.__version__
+    except Exception:  # pragma: no cover
+        pass
+    return meta
+
+
+def stamp(payload: dict) -> dict:
+    """Attach ``meta`` to a benchmark payload (in place, returned)."""
+    payload.setdefault("meta", env_metadata())
+    return payload

@@ -103,7 +103,12 @@ def _payload_metrics(payload: dict) -> Dict[str, float]:
 
 
 def extract_metrics(payload: dict) -> Dict[str, float]:
-    """Throughput-shaped metrics (higher = better) from any artifact."""
+    """Throughput-shaped metrics (higher = better) from any artifact.
+
+    The ``meta`` environment-provenance block (``benchmarks/_env.py``)
+    is ignored: machine/stack info never participates in comparisons.
+    """
+    payload = {k: v for k, v in payload.items() if k != "meta"}
     if "rows" in payload:
         return _rows_metrics(payload)
     return _payload_metrics(payload)

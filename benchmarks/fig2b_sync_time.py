@@ -7,6 +7,13 @@ load; BS is pinned at the compute bound, independent of load.
 
 The whole (policy x load x fraction) grid runs as ONE stacked simulation
 on the vectorized engine (``repro.net.engine``).
+
+The sweep runs under a ``repro.obs.Collector``, so beyond the per-cell
+sync times it reports the FL upload-delay *distribution* per
+(policy, load) — p50/p95/p99 from the engine's streaming histograms —
+the tail-latency view the paper's mean-only Fig. 2b hides.  (The
+percentile tokens never match the regression gate's throughput regex;
+they are informational rows.)
 """
 from __future__ import annotations
 
@@ -48,10 +55,13 @@ def sweep_cases(seed: int = 1) -> list:
 
 
 def run() -> list:
+    from repro.obs import Collector
+
     cfg = PONConfig(n_onus=N_ONUS)
     cases = sweep_cases()
+    collector = Collector(keep_phases=False)
     t0 = time.time()
-    results = simulate_round_sweep(cfg, cases)
+    results = simulate_round_sweep(cfg, cases, collector=collector)
     wall = time.time() - t0
     rows = []
     tags = [(policy, load, frac) for policy, load in GRID
@@ -67,6 +77,23 @@ def run() -> list:
                     f"sync_s={r.sync_time:.3f} "
                     f"compute_bound_s={r.compute_bound:.3f} "
                     f"comm_s={r.comm_overhead:.3f}"
+                ),
+            }
+        )
+    # upload-delay distribution per (policy, load), pooled over the
+    # involvement fractions — the engine's streaming histograms
+    for (policy, load), hist in sorted(collector.delay_hist.items()):
+        s = hist.summary()
+        rows.append(
+            {
+                "name": f"fig2b_ul_delay_{policy}_load{load:g}",
+                "us_per_call": wall * 1e6 / len(cases),
+                "derived": (
+                    f"n={int(s['n'])} "
+                    f"ul_p50_s={s['p50']:.3f} "
+                    f"ul_p95_s={s['p95']:.3f} "
+                    f"ul_p99_s={s['p99']:.3f} "
+                    f"ul_mean_s={s['mean']:.3f}"
                 ),
             }
         )

@@ -243,8 +243,10 @@ def main():
     m = measure(full=args.full)
     print(json.dumps(m, indent=2))
     if args.json:
+        from benchmarks._env import stamp
+
         with open(args.json, "w") as f:
-            json.dump(m, f, indent=2)
+            json.dump(stamp(m), f, indent=2)
             f.write("\n")
 
 

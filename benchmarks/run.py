@@ -30,6 +30,7 @@ def collect_modules(tier: str):
         fig2b_sync_time,
         multi_pon,
         net_engine,
+        obs_overhead,
         roofline_report,
         timeline,
         training_time_saving,
@@ -43,6 +44,7 @@ def collect_modules(tier: str):
         ("multi_pon", multi_pon),
         ("timeline", timeline),
         ("async_timeline", async_timeline),
+        ("obs_overhead", obs_overhead),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),
     ]
@@ -88,10 +90,13 @@ def main(argv=None) -> None:
                 "module": name,
             })
     if args.json:
+        from benchmarks._env import env_metadata
+
         payload = {
             "tier": args.tier,
             "python": platform.python_version(),
             "platform": platform.platform(),
+            "meta": env_metadata(),
             "rows": rows,
         }
         with open(args.json, "w") as f:

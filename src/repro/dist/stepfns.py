@@ -351,6 +351,24 @@ def fed_update_bits(cfg: ModelConfig, compress: Optional[str] = "int8",
     return compressed_update_bits(params, comp)
 
 
+def payload_summary(cfg: ModelConfig,
+                    schemes=("none", "int8"),
+                    topk_frac: float = 0.05) -> dict:
+    """Wire-size provenance of one pod's upload per compression scheme.
+
+    The observability layer stamps this into metrics reports and JSONL
+    round logs so a timing artifact carries the payload sizes it was
+    produced under (``model_bits`` is the fp32 downlink broadcast).
+    """
+    bits = {str(s): int(fed_update_bits(cfg, s, topk_frac))
+            for s in schemes}
+    return {
+        "model_bits": bits.get("none", int(fed_update_bits(cfg, "none"))),
+        "upload_bits": bits,
+        "topk_frac": topk_frac,
+    }
+
+
 # ---------------------------------------------------------------------------
 # serving
 # ---------------------------------------------------------------------------

@@ -54,6 +54,10 @@ class CoSimConfig:
     # then describes ONE segment and clients spread across
     # n_pons * pon.n_onus ONUs (None = single PON)
     topology: Optional[MultiPonTopology] = None
+    # observability hub (repro.obs.Collector) threaded into every
+    # network simulation this co-sim drives; None (the default) leaves
+    # all outputs bitwise identical to an uninstrumented run
+    collector: Optional[object] = None
 
     @classmethod
     def from_fed_model(cls, model_cfg, compress: str = "int8", **kw):
@@ -100,6 +104,7 @@ class FLNetworkCoSim:
         self.cfg = cfg
         self._timing_cache: Dict[Tuple, float] = {}
         self._update_bits_from_compression = False
+        self._collector = cfg.collector
 
     def _round_sync_time(self, clients: List[ClientProfile]) -> float:
         # the key must pin every cfg field the timing depends on —
@@ -128,6 +133,7 @@ class FLNetworkCoSim:
                               topology=self.cfg.topology)
                     for s in range(self.cfg.timing_seeds)
                 ],
+                collector=self._collector,
             )
             self._timing_cache[key] = float(
                 np.mean([r.sync_time for r in results])
@@ -195,6 +201,7 @@ class FLNetworkCoSim:
                        topology=self.cfg.topology)
              for s in range(self.cfg.timing_seeds)],
             schedule,
+            collector=self._collector,
         )
         return np.mean([r.sync_times for r in results], axis=0)
 
@@ -245,6 +252,7 @@ class FLNetworkCoSim:
                        policy=self.cfg.policy, seed=0,
                        topology=self.cfg.topology)],
             schedule,
+            collector=self._collector,
         )[0]
         by_id = {c.client_id: c for c in self.server.clients}
         pending: Dict[int, "PendingUpdate"] = {}
@@ -274,6 +282,15 @@ class FLNetworkCoSim:
             log = self.server.apply_updates(items, eval_fn=eval_fn)
             log.sync_time_s = rnd.sync_time
             total_time += rnd.sync_time
+            if self._collector is not None:
+                self._collector.event(
+                    "fl_round", mode="coupled", round=log.round_index,
+                    sync_time_s=rnd.sync_time, n_arrived=log.n_arrived,
+                    n_deferred=len(rnd.deferred),
+                    n_dropped=len(rnd.dropped),
+                    n_partial=len(rnd.partial),
+                    payload_bits=float(sum(rnd.ul_bits.values())),
+                )
             rounds.append(
                 {
                     "round": log.round_index,
@@ -302,6 +319,7 @@ class FLNetworkCoSim:
         deadline_s=None,
         deadline_policy: str = "defer",
         async_buffer: Optional[int] = None,
+        collector=None,
     ) -> CoSimResult:
         """Train ``n_rounds`` rounds and attach simulated network timing.
 
@@ -318,7 +336,17 @@ class FLNetworkCoSim:
         complete — see :meth:`_run_coupled`. Compression-measured
         upload sizes (``update_bits_from_compression``) are a
         decoupled-path feature only.
+
+        ``collector`` (``repro.obs.Collector``) overrides
+        ``cfg.collector`` for this run; either turns on metrics in
+        every network simulation the co-sim drives plus per-round
+        ``fl_round`` events. ``None`` everywhere is bitwise identical
+        to an uninstrumented run.
         """
+        from repro.obs.trace import maybe_span
+
+        if collector is not None:
+            self._collector = collector
         if backend not in ("timeline", "per_round"):
             raise ValueError(f"unknown backend {backend!r}")
         if mode not in ("sync", "async"):
@@ -348,7 +376,8 @@ class FLNetworkCoSim:
         sync = 0.0
         total_time = 0.0
         for _ in range(n_rounds):
-            log = self.server.run_round(eval_fn=eval_fn)
+            with maybe_span(self._collector, "fl:train_round"):
+                log = self.server.run_round(eval_fn=eval_fn)
             profiles, m_bits = self._round_profiles(log)
             per_round_profiles.append(profiles)
             per_round_bits.append(m_bits)
@@ -356,6 +385,12 @@ class FLNetworkCoSim:
                 sync = self._round_sync_time(profiles)
                 log.sync_time_s = sync
                 total_time += sync
+            if self._collector is not None:
+                self._collector.event(
+                    "fl_round", mode="sync", round=log.round_index,
+                    n_arrived=log.n_arrived,
+                    payload_bits=float(m_bits) * log.n_arrived,
+                )
             rounds.append(
                 {
                     "round": log.round_index,

@@ -26,7 +26,11 @@ def serve(
     max_new_tokens: int = 16,
     temperature: float = 0.0,
     seed: int = 0,
+    log_jsonl=None,
 ):
+    from repro.obs import EventLog
+
+    log = EventLog(jsonl_path=log_jsonl)
     cfg = get_config(arch, smoke=smoke)
     key = jax.random.PRNGKey(seed)
     params = lm.init_params(key, cfg)
@@ -63,11 +67,16 @@ def serve(
     decode_s = time.time() - t1
     out = jnp.concatenate(generated, axis=1)
     tps = batch * max_new_tokens / max(decode_s, 1e-9)
-    print(
-        f"{arch}: prefill({batch}x{prompt_len})={prefill_s*1e3:.1f}ms "
-        f"decode {max_new_tokens} steps={decode_s*1e3:.1f}ms "
-        f"({tps:.1f} tok/s batched)"
+    log.emit(
+        "serve",
+        echo="{arch}: prefill({batch}x{prompt_len})={prefill_ms:.1f}ms "
+             "decode {new_tokens} steps={decode_ms:.1f}ms "
+             "({tps:.1f} tok/s batched)",
+        arch=arch, batch=batch, prompt_len=prompt_len,
+        prefill_ms=prefill_s * 1e3, new_tokens=max_new_tokens,
+        decode_ms=decode_s * 1e3, tps=tps,
     )
+    log.close()
     return np.asarray(out)
 
 
@@ -78,10 +87,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--log-jsonl", default=None,
+                    help="write structured JSONL events to this path")
     args = ap.parse_args(argv)
     serve(
         arch=args.arch, batch=args.batch, prompt_len=args.prompt_len,
         max_new_tokens=args.max_new_tokens, temperature=args.temperature,
+        log_jsonl=args.log_jsonl,
     )
 
 

@@ -9,6 +9,12 @@ only the mesh constructor changes.
 Usage:
   python -m repro.launch.train --arch olmo-1b --smoke --steps 50 \
       --rounds 5 --ckpt-dir /tmp/ckpt
+
+Observability: ``--log-jsonl PATH`` writes every console line as a
+structured JSON event (the console stays a formatted view of the same
+events) plus per-round records and a final metrics summary;
+``--trace PATH`` writes a Chrome-trace JSON of the run's spans
+(open in Perfetto / chrome://tracing).
 """
 from __future__ import annotations
 
@@ -54,19 +60,33 @@ def train(
     deadline_s: Optional[float] = None,
     deadline_policy: str = "defer",
     async_buffer: Optional[int] = None,
+    log_jsonl: Optional[str] = None,
+    trace_path: Optional[str] = None,
+    collector=None,
 ):
+    from repro.obs import Collector, EventLog, SpanTracer
+    from repro.obs.trace import maybe_span
+
     cfg = get_config(arch, smoke=smoke).replace(grad_accum=1)
     if config_overrides:
         cfg = cfg.replace(**config_overrides)
     opt_cfg = OptimizerConfig(name="adamw", lr=lr)
     schedule = warmup_cosine(lr, 20, steps_per_round * rounds)
 
+    log = EventLog(jsonl_path=log_jsonl)
+    if collector is None and (log_jsonl or trace_path):
+        collector = Collector(
+            tracer=SpanTracer(enabled=trace_path is not None)
+        )
+
     n_dev = jax.device_count()
     pods = n_pods if n_dev % n_pods == 0 and n_dev >= n_pods else 1
     mesh = make_host_mesh(model_parallel=1, pods=pods) if pods > 1 else (
         make_host_mesh(model_parallel=1)
     )
-    print(f"mesh: {dict(mesh.shape)} devices={n_dev}")
+    log.emit("mesh", echo="mesh: {shape} devices={devices}",
+             shape=dict(mesh.shape), devices=n_dev, arch=arch,
+             pods=pods, policy=policy, load=load)
 
     # federated data: one disjoint shard per pod
     tokens = lm_tokens(400_000, cfg.vocab_size, seed=0)
@@ -101,13 +121,16 @@ def train(
             if restored is not None:
                 state, meta = restored
                 start_round = int(meta.get("round", 0))
-                print(f"resumed from round {start_round}")
+                log.emit("resume", echo="resumed from round {round}",
+                         round=start_round)
 
         # PON timing for the round (the paper's co-simulation); the slice
         # is sized for the measured payloads, not the paper's CNN
         # constant: compressed per-pod uplink, fp32 broadcast downlink
         up_bits = float(stepfns.fed_update_bits(cfg, compress))
         down_bits = float(stepfns.fed_update_bits(cfg, "none"))
+        log.emit("payload", compress=compress, upload_bits=up_bits,
+                 model_bits=down_bits)
         rng = np.random.default_rng(0)
         profiles = [
             ClientProfile(client_id=i, t_ud=float(t), t_dl=0.0,
@@ -136,14 +159,17 @@ def train(
         # to the aggregation step below
         wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
         n_net_rounds = max(rounds - start_round, 1)
-        timeline = simulate_timeline_sweep(
-            pon,
-            [SweepCase(workload=wl, load=load, policy=policy, seed=0,
-                       topology=topology)],
-            TimelineSchedule(n_rounds=n_net_rounds, deadline_s=deadline_s,
-                             deadline_policy=deadline_policy,
-                             buffer_k=async_buffer),
-        )[0]
+        with maybe_span(collector, "net:timeline", rounds=n_net_rounds):
+            timeline = simulate_timeline_sweep(
+                pon,
+                [SweepCase(workload=wl, load=load, policy=policy, seed=0,
+                           topology=topology)],
+                TimelineSchedule(n_rounds=n_net_rounds,
+                                 deadline_s=deadline_s,
+                                 deadline_policy=deadline_policy,
+                                 buffer_k=async_buffer),
+                collector=collector,
+            )[0]
         sync_times = timeline.sync_times
         # deadline/async rounds: not every pod's update reaches every
         # aggregation — drive the buffered staleness-weighted round step
@@ -175,7 +201,11 @@ def train(
                 loss = float(jnp.mean(metrics["loss"]))
                 losses.append(loss)
                 if it % log_every == 0:
-                    print(f"round {rnd} step {it}: loss={loss:.4f}")
+                    log.emit(
+                        "step",
+                        echo="round {round} step {step}: loss={loss:.4f}",
+                        round=rnd, step=it, loss=loss,
+                    )
             if fed:
                 weights = jnp.ones((pods,), jnp.float32)
                 if coupled:
@@ -214,22 +244,35 @@ def train(
             sync = float(sync_times[min(rnd - start_round,
                                         len(sync_times) - 1)])
             wall_simulated += sync
-            history.append(
-                {"round": rnd, "loss": float(np.mean(losses)),
-                 "sync_s": sync, "wall_s": time.time() - t0}
-            )
+            entry = {"round": rnd, "loss": float(np.mean(losses)),
+                     "sync_s": sync, "wall_s": time.time() - t0}
+            history.append(entry)
+            log.emit("round", **entry)
             if mgr is not None:
                 mgr.save(rnd + 1, state, metadata={"round": rnd + 1})
         if mgr is not None:
             mgr.wait()
         if history:
-            print(
-                f"done: {rounds} rounds, final loss "
-                f"{history[-1]['loss']:.4f}, simulated FL wall-clock "
-                f"{wall_simulated:.1f}s ({policy} @ load {load})"
+            log.emit(
+                "done",
+                echo="done: {rounds} rounds, final loss {loss:.4f}, "
+                     "simulated FL wall-clock {wall_s:.1f}s "
+                     "({policy} @ load {load})",
+                rounds=rounds, loss=history[-1]["loss"],
+                wall_s=wall_simulated, policy=policy, load=load,
             )
         else:
-            print(f"nothing to do: resumed at round {start_round}/{rounds}")
+            log.emit(
+                "done",
+                echo="nothing to do: resumed at round {round}/{rounds}",
+                round=start_round, rounds=rounds, loss=None,
+                wall_s=0.0, policy=policy, load=load,
+            )
+        if collector is not None:
+            log.emit("metrics", summary=collector.report().to_dict())
+            if trace_path:
+                collector.tracer.save(trace_path)
+        log.close()
         return state, history
 
 
@@ -262,6 +305,13 @@ def main(argv=None):
                     help="async (FedBuff) mode: aggregate as soon as K "
                          "uploads complete; stragglers defer with "
                          "staleness")
+    ap.add_argument("--log-jsonl", default=None,
+                    help="write structured JSONL events to this path "
+                         "(console lines become a formatted view of "
+                         "the same events)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace JSON of the run's spans "
+                         "to this path (view in Perfetto)")
     args = ap.parse_args(argv)
     train(
         arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
@@ -271,6 +321,7 @@ def main(argv=None):
         n_pons=args.pons, cps_gbps=args.cps_gbps,
         deadline_s=args.deadline, deadline_policy=args.deadline_policy,
         async_buffer=args.async_buffer,
+        log_jsonl=args.log_jsonl, trace_path=args.trace,
     )
 
 

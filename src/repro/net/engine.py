@@ -613,7 +613,8 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                max_t: float = 600.0, fill_unfinished: bool = True,
                cap_row: Optional[np.ndarray] = None,
                cps_cap: Optional[float] = None, n_pons: int = 1,
-               deadline_row: Optional[np.ndarray] = None):
+               deadline_row: Optional[np.ndarray] = None,
+               collector=None, phase_label: str = ""):
     """One transfer phase for a (policy-homogeneous) batch of rows.
 
     Rows are ``(case, pon)`` pairs (case-major); ``cap_row`` is each
@@ -640,6 +641,14 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     ``max_t``-capped ``fill_unfinished`` behaviour. All ``n_pons``
     rows of one case must share a deadline (the CPS waterfill couples
     them).
+
+    ``collector`` (``repro.obs.Collector``) turns on per-cycle metrics
+    over the ``(B,)`` row axis — backlog depths, grant totals, cycle
+    utilization, waterfill residuals, CPS want/eff — as a
+    ``PhaseStats`` registered under ``phase_label``.  With
+    ``collector=None`` the instrumentation is a single identity check
+    per cycle and every output is bitwise unchanged: the accumulators
+    only *read* arrays the phase already computed.
     """
     B = rem_init.shape[0]
     N = cfg.n_onus
@@ -665,6 +674,12 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     # paper's isolation claim, and it is exact — not an approximation).
     use_bg = mode == "fcfs"
     bg = _BgQueues(B, N) if use_bg else None
+
+    obs = None
+    if collector is not None:
+        obs = collector.phase(phase_label or mode, B)
+        ob_bg_depth = ob_fl_depth = ob_bg_g = ob_fl_g = None
+        ob_cps_w = ob_cps_e = None
 
     n_left = int(np.count_nonzero(~done & lay.part))
     waiting = lay.part & ~done
@@ -694,6 +709,10 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
         # the idle stretch before the first ready client skips FL work
         if n_left > n_wait:
             backlog_onu = fl.backlog_per_onu()
+            if obs is not None:
+                ob_fl_depth = backlog_onu.sum(axis=1)
+                if use_bg:
+                    ob_bg_depth = bg.backlog.sum(axis=1)
             if mode == "fcfs":
                 if cps_cap is None:
                     eff = cap_cyc
@@ -705,6 +724,8 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                     eff = cps_waterfill(
                         want.reshape(-1, n_pons), cps_cap
                     ).reshape(-1)
+                    if obs is not None:
+                        ob_cps_w, ob_cps_e = want, eff
                 bg_grants = _waterfill(bg.backlog, bg.hol_key, eff)
                 cap_fl = eff - bg_grants.sum(axis=1)
                 fl_grants = _waterfill(
@@ -718,10 +739,16 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                     eff = cps_waterfill(
                         want.reshape(-1, n_pons), cps_cap
                     ).reshape(-1)
+                    if obs is not None:
+                        ob_cps_w, ob_cps_e = want, eff
                     if np.any(eff < want):
                         fl_grants = _slot_grants(
                             slot_arrays, backlog_onu, t, cyc, eff, N
                         )
+            if obs is not None:
+                ob_fl_g = fl_grants.sum(axis=1)
+                if use_bg:
+                    ob_bg_g = bg_grants.sum(axis=1)
             if use_bg:
                 bg.serve(bg_grants, k)
             if np.any(fl_grants > 0.0):
@@ -739,8 +766,20 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 eff = cps_waterfill(
                     want.reshape(-1, n_pons), cps_cap
                 ).reshape(-1)
+                if obs is not None:
+                    ob_cps_w, ob_cps_e = want, eff
             bg_grants = _waterfill(bg.backlog, bg.hol_key, eff)
+            if obs is not None:
+                ob_bg_depth = bg.backlog.sum(axis=1)
+                ob_bg_g = bg_grants.sum(axis=1)
             bg.serve(bg_grants, k)
+        if obs is not None:
+            obs.cycle(cap_cyc, bg_backlog=ob_bg_depth,
+                      fl_backlog=ob_fl_depth, bg_grants=ob_bg_g,
+                      fl_grants=ob_fl_g, cps_want=ob_cps_w,
+                      cps_eff=ob_cps_e)
+            ob_bg_depth = ob_fl_depth = ob_bg_g = ob_fl_g = None
+            ob_cps_w = ob_cps_e = None
         t += cyc
         k += 1
 
@@ -828,6 +867,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                          t_round_hint: float = 10.0,
                          max_t: float = 600.0,
                          ul_deadline_s=None,
+                         collector=None,
                          ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
 
@@ -854,8 +894,14 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     gives each case its OWN deadline (``None``/``inf`` entries =
     no deadline for that case) — the timeline's folded drop/partial
     rows and the async mode's per-case k-th-completion cutoffs.
+
+    ``collector`` (``repro.obs.Collector``, optional) records per-phase
+    cycle metrics inside ``_run_phase`` plus per-case upload-completion
+    times keyed by (policy, load); ``collector=None`` (the default) is
+    bitwise identical to an uninstrumented run.
     """
     from repro.net.sim import RoundResult  # lazy: sim imports us lazily
+    from repro.obs.trace import maybe_span
 
     cases = list(cases)
     topo = _sweep_topology(cases)
@@ -956,11 +1002,12 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             0.0,
         )
         ready0 = np.zeros_like(rem0)
-        dl_done[fcfs_rows], _ = _run_phase(
-            cfg, sub, rem0, ready0, providers(fcfs_rows, "dl"), "fcfs",
-            max_t=max_t, cap_row=cap_row[fcfs_rows], cps_cap=cps_cap,
-            n_pons=P,
-        )
+        with maybe_span(collector, "phase:dl:fcfs", rows=len(fcfs_rows)):
+            dl_done[fcfs_rows], _ = _run_phase(
+                cfg, sub, rem0, ready0, providers(fcfs_rows, "dl"), "fcfs",
+                max_t=max_t, cap_row=cap_row[fcfs_rows], cps_cap=cps_cap,
+                n_pons=P, collector=collector, phase_label="dl:fcfs",
+            )
     for r in bs_rows:
         b, p = int(row_case[r]), int(row_pon[r])
         t_bcast = (
@@ -981,12 +1028,14 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         sub = lay.rows(fcfs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[fcfs_rows], np.inf)
-        ul_done[fcfs_rows], ul_rem[fcfs_rows] = _run_phase(
-            cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
-            max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
-            cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
-            deadline_row=None if dl_row is None else dl_row[fcfs_rows],
-        )
+        with maybe_span(collector, "phase:ul:fcfs", rows=len(fcfs_rows)):
+            ul_done[fcfs_rows], ul_rem[fcfs_rows] = _run_phase(
+                cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
+                max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
+                cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
+                deadline_row=None if dl_row is None else dl_row[fcfs_rows],
+                collector=collector, phase_label="ul:fcfs",
+            )
     if len(bs_rows):
         per_row = []
         for r in bs_rows:
@@ -1016,13 +1065,15 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         sub = lay.rows(bs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[bs_rows], np.inf)
-        ul_done[bs_rows], ul_rem[bs_rows] = _run_phase(
-            cfg, sub, rem0, ready, None, "bs",
-            slot_arrays=slot_arrays, max_t=ul_max_t,
-            fill_unfinished=ul_deadline_s is None,
-            cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,
-            deadline_row=None if dl_row is None else dl_row[bs_rows],
-        )
+        with maybe_span(collector, "phase:ul:bs", rows=len(bs_rows)):
+            ul_done[bs_rows], ul_rem[bs_rows] = _run_phase(
+                cfg, sub, rem0, ready, None, "bs",
+                slot_arrays=slot_arrays, max_t=ul_max_t,
+                fill_unfinished=ul_deadline_s is None,
+                cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,
+                deadline_row=None if dl_row is None else dl_row[bs_rows],
+                collector=collector, phase_label="ul:bs",
+            )
 
     # ---- assemble --------------------------------------------------------
     results = []
@@ -1060,6 +1111,11 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             sync = dlb + case.workload.t_aggregate
         else:
             sync = max(ul.values()) + case.workload.t_aggregate
+        if collector is not None:
+            ul_times = [v for v in ul.values() if np.isfinite(v)]
+            if ul_times:
+                collector.record_upload_times(case.policy, case.load,
+                                              ul_times)
         results.append(RoundResult(
             policy=case.policy,
             sync_time=sync,

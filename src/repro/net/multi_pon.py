@@ -209,6 +209,7 @@ def simulate_multi_pon_round(
     ul_deadline_s: Optional[float] = None,
     no_dl_ids=frozenset(),
     stream_round: int = 0,
+    collector=None,
 ) -> RoundResult:
     """Cycle-by-cycle multi-PON reference round (the parity oracle).
 
@@ -221,6 +222,11 @@ def simulate_multi_pon_round(
     ``(seed, phase, stream_round, pon)``.  Semantics of everything
     else (FIFO queues, credit attribution, deadlines, carriers that
     skip the download) match ``repro.net.sim`` exactly.
+
+    ``collector`` (``repro.obs.Collector``, optional) records the CPS
+    waterfill per-PON want/eff bits, per-cycle CPS uplink utilization
+    and upload completion times; ``None`` (the default) is bitwise
+    identical to an uninstrumented run.
     """
     if policy not in ("fcfs", "bs"):
         raise ValueError(f"unknown policy {policy!r}")
@@ -250,6 +256,12 @@ def simulate_multi_pon_round(
             return raws
         want = np.array([_grant_total(g) for g in raws])
         eff = cps_waterfill(want, cps_cap)
+        if collector is not None:
+            collector.counter("multi_pon.cps_want_bits", (P,)).add(want)
+            collector.counter("multi_pon.cps_eff_bits", (P,)).add(eff)
+            collector.gauge("multi_pon.cps_util").observe(
+                float(eff.sum()) / cps_cap
+            )
         return [raws[p] if eff[p] >= want[p] else regrant(p, float(eff[p]))
                 for p in range(P)]
 
@@ -407,6 +419,9 @@ def simulate_multi_pon_round(
         sync = ul_deadline_s + workload.t_aggregate
     else:
         sync = max(ul_done.values()) + workload.t_aggregate
+    if collector is not None:
+        collector.record_upload_times(policy, total_load,
+                                      list(ul_done.values()))
     return RoundResult(
         policy=policy,
         sync_time=sync,

@@ -315,6 +315,31 @@ def _round_view(r: int, t_start: float, result: Optional[RoundResult],
     return rnd, deferred
 
 
+def _observe_round(collector, case, rnd: TimelineRound,
+                   deadline: Optional[float]) -> None:
+    """Fold one TimelineRound into the collector: round wall time and
+    outcome counts (``record_round``), staleness of arrived updates,
+    and deadline slack (deadline − completion) of clients that made the
+    cut. Pure reads — a ``None`` collector is a no-op and simulation
+    state is never touched."""
+    if collector is None:
+        return
+    if rnd.staleness:
+        collector.record_staleness(list(rnd.staleness.values()))
+    if deadline is not None and rnd.result is not None and rnd.arrived:
+        slack = [deadline - rnd.result.ul_done.get(cid, np.nan)
+                 for cid in rnd.arrived]
+        collector.record_slack(case.policy, case.load, slack)
+    collector.record_round(
+        policy=case.policy, load=case.load, seed=case.seed,
+        round=rnd.round_index, sync_time=rnd.sync_time,
+        t_start=rnd.t_start, t_end=rnd.t_end,
+        ul_bits=float(sum(rnd.ul_bits.values())),
+        n_arrived=len(rnd.arrived), n_deferred=len(rnd.deferred),
+        n_dropped=len(rnd.dropped), n_partial=len(rnd.partial),
+    )
+
+
 def _kth_completion(result: RoundResult, rem_start: Dict[int, float],
                     buffer_k: int) -> float:
     """The async cutoff: completion time of the k-th pending upload.
@@ -380,11 +405,13 @@ def _build_rows(cases, schedule, r, carries):
 
 
 def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
-                    deadline_fn):
+                    deadline_fn, collector=None):
     """The shared round-by-round driver: build rows, resolve each
     round's deadline(s) via ``deadline_fn(r, row_cases, row_meta)``
     (a scalar, or a per-row list), advance the engine, fold results
     and carry deferred state/entry rounds forward."""
+    from repro.obs.trace import maybe_span
+
     B = len(cases)
     carries: List[Dict[int, float]] = [{} for _ in range(B)]
     entries: List[Dict[int, int]] = [{} for _ in range(B)]
@@ -396,10 +423,14 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
         for b, _, rem_start in row_meta:
             for cid in rem_start:
                 entries[b].setdefault(cid, r)
-        results = simulate_round_sweep(
-            cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
-            ul_deadline_s=deadline_fn(r, row_cases, row_meta),
-        ) if row_cases else []
+        deadlines = deadline_fn(r, row_cases, row_meta)
+        with maybe_span(collector, f"timeline:round[{r}]",
+                        rows=len(row_cases)):
+            results = simulate_round_sweep(
+                cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
+                ul_deadline_s=deadlines, collector=collector,
+            ) if row_cases else []
+        per_row_dl = isinstance(deadlines, (list, tuple, np.ndarray))
         for b, ridx, rem_start in row_meta:
             res = results[ridx] if ridx is not None else None
             rnd, carry = _round_view(
@@ -410,10 +441,16 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
             carries[b] = carry
             entries[b] = {cid: entries[b][cid] for cid in carry}
             t_now[b] += rnd.sync_time
+            if collector is not None:
+                dl = (deadlines[ridx]
+                      if per_row_dl and ridx is not None else
+                      None if per_row_dl else deadlines)
+                _observe_round(collector, cases[b], rnd, dl)
     return out
 
 
-def _sequential(cfg, cases, schedule, t_round_hint, max_t):
+def _sequential(cfg, cases, schedule, t_round_hint, max_t,
+                collector=None):
     """Round-by-round engine advance, carrying deferred bits (the only
     legal order under defer deadlines; also the PR 2 per-round loop that
     the folded mode is benchmarked against)."""
@@ -421,10 +458,11 @@ def _sequential(cfg, cases, schedule, t_round_hint, max_t):
         cfg, cases, schedule, t_round_hint, max_t,
         schedule.deadline_policy,
         lambda r, row_cases, row_meta: schedule.deadline(r),
+        collector=collector,
     )
 
 
-def _async(cfg, cases, schedule, t_round_hint, max_t):
+def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None):
     """FedBuff-style async rounds: each round is cut at the completion
     time of the ``buffer_k``-th pending upload (two engine passes — a
     free-running pass locates ``t_k``, a deadline pass at ``t_k``
@@ -436,6 +474,9 @@ def _async(cfg, cases, schedule, t_round_hint, max_t):
     k = schedule.buffer_k
 
     def deadline_fn(r, row_cases, row_meta):
+        # NOTE: the free-running probe pass stays uninstrumented — only
+        # the deadline pass (the round that actually happens) feeds the
+        # collector, so nothing is double-counted.
         free = simulate_round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
         )
@@ -449,10 +490,11 @@ def _async(cfg, cases, schedule, t_round_hint, max_t):
 
     return _advance_rounds(
         cfg, cases, schedule, t_round_hint, max_t, "defer", deadline_fn,
+        collector=collector,
     )
 
 
-def _folded(cfg, cases, schedule, t_round_hint, max_t):
+def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
     """The whole timeline as ONE stacked simulation: the round axis is
     folded into the engine batch axis (legal whenever rounds are
     independent given their start times — no deadline, or drop/partial
@@ -479,11 +521,16 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t):
                 topology=case.topology,
             ))
             row_deadlines.append(schedule.deadline(r))
+    from repro.obs.trace import maybe_span
+
     has_deadline = schedule.deadline_s is not None
-    results = simulate_round_sweep(
-        cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
-        ul_deadline_s=row_deadlines if has_deadline else None,
-    ) if rows else []
+    with maybe_span(collector, "timeline:folded", rows=len(rows),
+                    rounds=schedule.n_rounds):
+        results = simulate_round_sweep(
+            cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
+            ul_deadline_s=row_deadlines if has_deadline else None,
+            collector=collector,
+        ) if rows else []
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
                           rounds=[]) for c in cases]
     t_now = np.zeros(len(cases))
@@ -495,6 +542,9 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t):
         )
         out[b].rounds.append(rnd)
         t_now[b] += rnd.sync_time
+        if collector is not None:
+            _observe_round(collector, cases[b], rnd,
+                           schedule.deadline(r))
     return out
 
 
@@ -502,7 +552,8 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                             schedule: TimelineSchedule,
                             mode: str = "auto",
                             t_round_hint: float = 10.0,
-                            max_t: float = 600.0) -> List[TimelineResult]:
+                            max_t: float = 600.0,
+                            collector=None) -> List[TimelineResult]:
     """Advance the full multi-round timeline for every case.
 
     ``mode="auto"`` folds the round axis into the batch (one stacked
@@ -512,6 +563,13 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     ``schedule.buffer_k`` selects the async (FedBuff) driver.
     ``"folded"``/``"sequential"`` force a path (parity tests check they
     agree when both are legal).
+
+    ``collector`` (``repro.obs.Collector``, optional) records engine
+    phase metrics, per-round outcomes (``record_round``), upload-delay
+    and deadline-slack histograms and staleness counts; ``None`` (the
+    default) is bitwise identical to an uninstrumented run. Async
+    schedules instrument only the deadline pass — the free-running
+    probe pass is a search, not a simulated round.
     """
     cases = _validate(cases, schedule)
     if schedule.asynchronous:
@@ -520,7 +578,8 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                 "async rounds couple consecutive rounds (stragglers "
                 "defer); folded mode is unavailable"
             )
-        return _async(cfg, cases, schedule, t_round_hint, max_t)
+        return _async(cfg, cases, schedule, t_round_hint, max_t,
+                      collector=collector)
     if mode == "auto":
         mode = "sequential" if schedule.couples_rounds else "folded"
     if mode == "folded":
@@ -530,9 +589,11 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                 "mode requires a schedule without deferred state "
                 "(no deadline, or drop/partial policies)"
             )
-        return _folded(cfg, cases, schedule, t_round_hint, max_t)
+        return _folded(cfg, cases, schedule, t_round_hint, max_t,
+                       collector=collector)
     if mode == "sequential":
-        return _sequential(cfg, cases, schedule, t_round_hint, max_t)
+        return _sequential(cfg, cases, schedule, t_round_hint, max_t,
+                           collector=collector)
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -540,6 +601,7 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
                                 schedule: TimelineSchedule,
                                 t_round_hint: float = 10.0,
                                 max_t: float = 600.0,
+                                collector=None,
                                 ) -> List[TimelineResult]:
     """The PR 2 per-round loop: one engine call per round, queue state
     rebuilt every round. Identical results to ``simulate_timeline_sweep``
@@ -547,8 +609,10 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
     the (inherently per-round) two-pass async driver."""
     cases = _validate(cases, schedule)
     if schedule.asynchronous:
-        return _async(cfg, cases, schedule, t_round_hint, max_t)
-    return _sequential(cfg, cases, schedule, t_round_hint, max_t)
+        return _async(cfg, cases, schedule, t_round_hint, max_t,
+                      collector=collector)
+    return _sequential(cfg, cases, schedule, t_round_hint, max_t,
+                       collector=collector)
 
 
 # ---------------------------------------------------------------------------
