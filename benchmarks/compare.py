@@ -18,7 +18,12 @@ of the repo's benchmark artifacts:
 
 The gate fails (exit 1) when any matching key regresses by more than
 ``--threshold`` (default 25%).  Zero matching keys is a wiring error
-(exit 2), not a pass.
+(exit 2), not a pass — and the same check runs *per baseline file*:
+a committed BENCH_*.json whose keys all miss the current metrics would
+otherwise silently drop out of the intersection compare() walks, so
+adding a new baseline without wiring its producer into CI can never
+weaken the gate unnoticed.  Each uncovered file is reported with its
+unmatched keys (exit 2).
 
 ``--update-baselines`` records the current metrics into
 ``benchmarks/baseline_overrides.json`` — entries there take precedence
@@ -99,6 +104,15 @@ def _payload_metrics(payload: dict) -> Dict[str, float]:
                 out[f"{name}.speedup_vs_ref_loop"] = (
                     cell["speedup_vs_ref_loop"]
                 )
+    elif bench == "fault_injection_grid":
+        # same names as benchmarks/faults.py's harness rows; the rate
+        # grid is embedded in the key so a grid change un-matches
+        # instead of mis-comparing
+        for cell in payload.get("cells", []):
+            name = (f"fault_grid_{cell['mode']}"
+                    f"_d{int(cell['dropout_rate'] * 100):02d}"
+                    f"_o{int(cell['outage_rate'] * 100):02d}")
+            out[f"{name}.rounds_per_sec"] = cell["rounds_per_sec"]
     return out
 
 
@@ -114,8 +128,10 @@ def extract_metrics(payload: dict) -> Dict[str, float]:
     return _payload_metrics(payload)
 
 
-def load_metrics(paths: List[str]) -> Dict[str, float]:
-    out: Dict[str, float] = {}
+def load_metrics_per_file(paths: List[str]) -> Dict[str, Dict[str, float]]:
+    """Per-path metric dicts (the flat merge loses which file
+    contributed what — coverage checking needs the attribution)."""
+    out: Dict[str, Dict[str, float]] = {}
     for path in paths:
         with open(path) as f:
             payload = json.load(f)
@@ -123,8 +139,36 @@ def load_metrics(paths: List[str]) -> Dict[str, float]:
         if not got:
             print(f"warning: no throughput metrics in {path}",
                   file=sys.stderr)
+        out[path] = got
+    return out
+
+
+def load_metrics(paths: List[str]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for got in load_metrics_per_file(paths).values():
         out.update(got)
     return out
+
+
+def check_baseline_coverage(per_file: Dict[str, Dict[str, float]],
+                            current: Dict[str, float]) -> List[str]:
+    """Error strings for baseline files with zero keys in ``current``.
+
+    ``compare`` only walks the key intersection, so a baseline file
+    none of whose keys match contributes nothing — it is dead weight
+    that *looks* gated.  That happens exactly when a new BENCH_*.json
+    is committed without teaching CI to produce the matching fresh
+    measurement; flag it per file (with the orphaned keys) instead of
+    letting the global gate quietly shrink.
+    """
+    errors = []
+    for path, keys in per_file.items():
+        if keys and not set(keys) & set(current):
+            errors.append(
+                f"{path}: none of its {len(keys)} baseline keys match "
+                f"the current metrics; unmatched keys: {sorted(keys)}"
+            )
+    return errors
 
 
 def apply_overrides(baseline: Dict[str, float],
@@ -180,7 +224,19 @@ def self_test(baseline: Dict[str, float], threshold: float) -> int:
         print("self-test FAILED: unchanged metrics flagged",
               file=sys.stderr)
         return 1
-    print("self-test OK: gate rejects regressions and passes parity")
+    print("--- self-test: uncovered baseline file (must be flagged) ---")
+    phantom = {"BENCH_phantom.json": {"phantom.rounds_per_sec": 1.0}}
+    if not check_baseline_coverage(phantom, dict(baseline)):
+        print("self-test FAILED: fully-unmatched baseline file passed "
+              "the coverage check", file=sys.stderr)
+        return 1
+    if check_baseline_coverage({"covered.json": dict(baseline)},
+                               baseline):
+        print("self-test FAILED: covered baseline file flagged",
+              file=sys.stderr)
+        return 1
+    print("self-test OK: gate rejects regressions, passes parity and "
+          "flags uncovered baseline files")
     return 0
 
 
@@ -200,7 +256,11 @@ def main(argv=None) -> int:
                          "regression")
     args = ap.parse_args(argv)
 
-    baseline = apply_overrides(load_metrics(args.baseline))
+    per_file = load_metrics_per_file(args.baseline)
+    merged: Dict[str, float] = {}
+    for got in per_file.values():
+        merged.update(got)
+    baseline = apply_overrides(merged)
     if args.self_test:
         return self_test(baseline, args.threshold)
     if not args.current:
@@ -220,6 +280,13 @@ def main(argv=None) -> int:
         print(f"wrote {len(overrides)} baseline overrides to "
               f"{OVERRIDES_PATH}")
         return 0
+    uncovered = check_baseline_coverage(per_file, current)
+    if uncovered:
+        print("benchmark gate mis-wired: baseline file(s) contribute "
+              "zero matching keys:", file=sys.stderr)
+        for err in uncovered:
+            print(f"  {err}", file=sys.stderr)
+        return 2
     regressions = compare(current, baseline, args.threshold)
     if regressions:
         print("\nbenchmark regressions past the gate threshold:",

@@ -1,0 +1,303 @@
+"""Fault-injection chaos benchmark: engine throughput under faults.
+
+How much does deterministic fault injection (``repro.faults``) cost the
+timeline engine, and what does it do to the paper's training-time
+story? The fast tier measures simulator **rounds/sec** over a
+dropout-rate × outage-rate grid in three aggregation modes at the
+Fig. 2b 0.8-load operating point:
+
+* ``sync``  — deferral deadline (the PR 5 sequential carry driver,
+  now also booking retry-with-backoff entries);
+* ``async`` — FedBuff ``buffer_k`` rounds (faulted uploads never count
+  toward the buffer);
+* ``quorum`` — quorum aggregation (deadline doubles until ``>= q``
+  un-faulted arrivals, then degrades).
+
+``--full`` adds a time-to-target-accuracy comparison (real CNN
+co-simulation, clean vs faulty vs faulty+quorum) — the chaos
+counterpart of ``benchmarks/async_timeline.py``'s accuracy part.
+
+``--gate-overhead`` re-runs the grid's heaviest cell with an enabled
+``repro.obs`` collector and exits 1 when instrumenting the fault sweep
+costs more than ``--threshold`` (10%) extra wall-clock — the nightly
+chaos step's guard that fault/retry/quorum event recording stays cheap.
+
+``python benchmarks/faults.py --json BENCH_faults.json`` writes the
+committed baseline; ``benchmarks/compare.py`` gates the per-cell
+``rounds_per_sec`` keys against it in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from benchmarks.async_timeline import (  # noqa: E402
+    BUFFER_K,
+    DEADLINE_S,
+    LOAD,
+    N_ONUS,
+    op_point_case,
+)
+from repro.faults import FaultSchedule  # noqa: E402
+from repro.net import (  # noqa: E402
+    PONConfig,
+    TimelineSchedule,
+    simulate_timeline_sweep,
+)
+
+TIER = "fast"
+
+THRESHOLD = 0.10                   # obs-overhead gate (chaos nightly)
+N_ROUNDS = 6
+DROPOUT_RATES = (0.0, 0.2)
+OUTAGE_RATES = (0.0, 0.5)
+
+
+def _schedule(mode: str, n_rounds: int,
+              faults: FaultSchedule) -> TimelineSchedule:
+    f = None if faults.trivial else faults
+    if mode == "sync":
+        return TimelineSchedule(n_rounds=n_rounds, deadline_s=DEADLINE_S,
+                                faults=f)
+    if mode == "async":
+        return TimelineSchedule(n_rounds=n_rounds, buffer_k=BUFFER_K,
+                                faults=f)
+    if mode == "quorum":
+        return TimelineSchedule(n_rounds=n_rounds, deadline_s=DEADLINE_S,
+                                deadline_policy="drop", faults=f,
+                                quorum_frac=0.75)
+    raise ValueError(mode)
+
+
+def _grid_faults(dropout: float, outage: float) -> FaultSchedule:
+    return FaultSchedule(seed=3, dropout_rate=dropout, loss_rate=0.0,
+                         outage_rate=outage, outage_duration_s=0.5,
+                         outage_start_max_s=2.0)
+
+
+def _best_of(f, repeats):
+    best, out = float("inf"), None
+    for _ in range(max(repeats, 1)):
+        t0 = time.time()
+        out = f()
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def grid_part(n_rounds: int, repeats: int = 2) -> dict:
+    """Rounds/sec over the dropout × outage grid, per aggregation mode."""
+    cfg = PONConfig(n_onus=N_ONUS)
+    case = op_point_case()
+    # warm allocators / sampler LUTs
+    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1))
+
+    cells = []
+    for dropout in DROPOUT_RATES:
+        for outage in OUTAGE_RATES:
+            faults = _grid_faults(dropout, outage)
+            for mode in ("sync", "async", "quorum"):
+                sched = _schedule(mode, n_rounds, faults)
+                wall, res = _best_of(
+                    lambda s=sched: simulate_timeline_sweep(
+                        cfg, [case], s
+                    ),
+                    repeats,
+                )
+                tl = res[0]
+                cells.append({
+                    "mode": mode,
+                    "dropout_rate": dropout,
+                    "outage_rate": outage,
+                    "wall_s": wall,
+                    "rounds_per_sec": n_rounds / wall,
+                    "sim_total_s": float(tl.sync_times.sum()),
+                    "n_failed": int(sum(len(r.failed) for r in tl.rounds)),
+                    "n_retries": int(
+                        sum(len(r.retry_at) for r in tl.rounds)
+                    ),
+                    "n_extends": int(
+                        sum(r.deadline_extensions for r in tl.rounds)
+                    ),
+                })
+    return {"n_rounds": n_rounds, "load": LOAD, "n_onus": N_ONUS,
+            "deadline_s": DEADLINE_S, "buffer_k": BUFFER_K,
+            "cells": cells}
+
+
+def accuracy_part(n_rounds: int, target: float = 0.8) -> dict:
+    """Time-to-target accuracy, clean vs faulty vs faulty+quorum (real
+    CNN coupled co-simulation at 0.8 load; ``--full`` only)."""
+    import jax
+
+    from repro.data import build_federated_cnn_clients
+    from repro.fl import CPSServer, SelectionConfig
+    from repro.fl.client import LocalTrainConfig
+    from repro.fl.simulation import CoSimConfig, FLNetworkCoSim
+    from repro.models import cnn
+
+    clients, test = build_federated_cnn_clients(
+        n_clients=8, samples_per_client=64, loss_fn=cnn.loss_fn,
+        train_cfg=LocalTrainConfig(lr=0.04, batch_size=16,
+                                   local_epochs=2),
+        seed=0,
+    )
+    test_batch = {"images": test["images"][:512],
+                  "labels": test["labels"][:512]}
+
+    def eval_fn(p):
+        return cnn.accuracy(p, test_batch)
+
+    faults = FaultSchedule(seed=3, dropout_rate=0.2, loss_rate=0.1,
+                           outage_rate=0.5, outage_duration_s=0.5,
+                           outage_start_max_s=2.0)
+
+    def cosim(**cfg_kw):
+        server = CPSServer(
+            global_params=cnn.init_params(jax.random.PRNGKey(0)),
+            clients=clients,
+            selection=SelectionConfig(strategy="all"),
+            seed=1,
+        )
+        cfg = CoSimConfig(
+            policy="bs", total_load=LOAD, model_bits=2e6,
+            upload_bits=3e8, timing_seeds=1,
+            pon=PONConfig(n_onus=8, line_rate_bps=1e9),
+            **cfg_kw,
+        )
+        return FLNetworkCoSim(server, cfg)
+
+    modes = {
+        "clean": ({}, {"deadline_s": 3.5, "deadline_policy": "drop"}),
+        "faulty": ({"faults": faults},
+                   {"deadline_s": 3.5, "deadline_policy": "drop"}),
+        "faulty_quorum": ({"faults": faults, "quorum_frac": 0.5},
+                          {"deadline_s": 3.5, "deadline_policy": "drop"}),
+    }
+    cells = {}
+    for name, (cfg_kw, run_kw) in modes.items():
+        res = cosim(**cfg_kw).run(n_rounds, eval_fn=eval_fn, **run_kw)
+        cells[name] = {
+            "total_sim_s": res.total_time_s,
+            "time_to_target_s": res.time_to_metric(target),
+            "acc_curve": [round(float(r["eval_metric"]), 3)
+                          for r in res.rounds],
+            "n_failed": int(sum(r.get("n_failed", 0)
+                                for r in res.rounds)),
+            "n_lost": int(sum(r.get("n_lost", 0) for r in res.rounds)),
+        }
+    return {"target_accuracy": target, "n_rounds": n_rounds,
+            "cells": cells}
+
+
+def overhead_part(n_rounds: int, repeats: int = 3) -> dict:
+    """Enabled-collector overhead on the grid's heaviest cell (dropout
+    + outage + quorum: every fault/retry/quorum event path fires)."""
+    from repro.obs import Collector
+
+    cfg = PONConfig(n_onus=N_ONUS)
+    case = op_point_case()
+    sched = _schedule("quorum", n_rounds,
+                      _grid_faults(DROPOUT_RATES[-1], OUTAGE_RATES[-1]))
+    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1),
+                            collector=Collector())
+
+    off_wall, off = _best_of(
+        lambda: simulate_timeline_sweep(cfg, [case], sched), repeats
+    )
+    on_wall, on = _best_of(
+        lambda: simulate_timeline_sweep(cfg, [case], sched,
+                                        collector=Collector()),
+        repeats,
+    )
+    assert all(
+        np.array_equal(a.sync_times, b.sync_times)
+        for a, b in zip(off, on)
+    ), "collector changed fault-sweep outputs"
+    return {
+        "off_wall_s": off_wall,
+        "on_wall_s": on_wall,
+        "overhead_frac": on_wall / off_wall - 1.0,
+        "threshold": THRESHOLD,
+    }
+
+
+def measure(full: bool = False) -> dict:
+    # the grid runs the SAME configuration with and without --full so
+    # the committed baseline's throughput keys match CI's fresh
+    # measurement; --full adds the (minutes-long) accuracy comparison
+    payload = {
+        "benchmark": "fault_injection_grid",
+        **grid_part(n_rounds=N_ROUNDS),
+    }
+    if full:
+        payload["accuracy"] = accuracy_part(n_rounds=10)
+    return payload
+
+
+def run() -> list:
+    m = measure(full=False)
+    rows = []
+    for cell in m["cells"]:
+        name = (f"fault_grid_{cell['mode']}"
+                f"_d{int(cell['dropout_rate'] * 100):02d}"
+                f"_o{int(cell['outage_rate'] * 100):02d}")
+        rows.append({
+            "name": name,
+            "us_per_call": cell["wall_s"] * 1e6,
+            "derived": (
+                f"rounds_per_sec={cell['rounds_per_sec']:.2f} "
+                f"failed={cell['n_failed']} "
+                f"retries={cell['n_retries']} "
+                f"extends={cell['n_extends']}"
+            ),
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="also run the CNN accuracy comparison (minutes)")
+    ap.add_argument("--gate-overhead", action="store_true",
+                    help="measure collector overhead on the faulty "
+                         "quorum sweep and exit 1 past the threshold")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement payload as JSON")
+    args = ap.parse_args(argv)
+
+    m = measure(full=args.full)
+    if args.gate_overhead:
+        m["obs_overhead"] = overhead_part(N_ROUNDS, repeats=args.repeats)
+    print(json.dumps(m, indent=2))
+    if args.json:
+        from benchmarks._env import stamp
+
+        with open(args.json, "w") as f:
+            json.dump(stamp(m), f, indent=2)
+            f.write("\n")
+    if args.gate_overhead:
+        frac = m["obs_overhead"]["overhead_frac"]
+        if frac > args.threshold:
+            print(
+                f"fault-sweep obs overhead gate FAILED: {frac:.1%} > "
+                f"{args.threshold:.0%}", file=sys.stderr,
+            )
+            return 1
+        print(f"fault-sweep obs overhead gate passed: {frac:.1%} <= "
+              f"{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

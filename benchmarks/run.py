@@ -26,6 +26,7 @@ def collect_modules(tier: str):
     from benchmarks import (
         async_timeline,
         bs_micro,
+        faults,
         fig2a_accuracy,
         fig2b_sync_time,
         multi_pon,
@@ -44,6 +45,7 @@ def collect_modules(tier: str):
         ("multi_pon", multi_pon),
         ("timeline", timeline),
         ("async_timeline", async_timeline),
+        ("faults", faults),
         ("obs_overhead", obs_overhead),
         ("fig2a_accuracy", fig2a_accuracy),
         ("roofline_report", roofline_report),

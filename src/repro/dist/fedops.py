@@ -197,7 +197,9 @@ def fedbuff_pods(pending, global_params, weights: jnp.ndarray,
                  arrived: jnp.ndarray, staleness: jnp.ndarray,
                  server_lr: float = 1.0, scheme: str = "none",
                  topk_frac: float = 0.05, staleness_power: float = 0.5,
-                 frac=None, residuals=None):
+                 frac=None, residuals=None,
+                 quorum_frac: Optional[float] = None,
+                 n_expected=None):
     """Buffered staleness-weighted (FedBuff) merge over the pod axis.
 
     ``pending``: pytree of ``(n_pods, ...)`` snapshotted update deltas
@@ -221,6 +223,12 @@ def fedbuff_pods(pending, global_params, weights: jnp.ndarray,
     with ``residuals`` the arrived pods' wire encodings run through
     error feedback (non-arrived pods' residuals pass through
     untouched) and the call returns ``(new_global, new_residuals)``.
+
+    ``quorum_frac`` gates the merge in-graph (traceable — no host
+    round-trip): fewer than ``ceil(quorum_frac * n_expected)`` arrivals
+    (``n_expected`` defaults to ``n_pods``) zeroes every merge weight,
+    so the round *degrades* — the global model passes through
+    untouched, mirroring ``repro.fl.aggregation.quorum_commit``.
     """
     m = arrived.astype(jnp.float32)
     w = weights.astype(jnp.float32) * m
@@ -228,6 +236,13 @@ def fedbuff_pods(pending, global_params, weights: jnp.ndarray,
     f = jnp.ones_like(w) if frac is None else jnp.asarray(frac, jnp.float32)
     # Σ w = 0 (no arrivals) must leave the global untouched
     w_norm = w / jnp.maximum(w.sum(), 1e-12) * s * f * m
+    if quorum_frac is not None:
+        n_exp = jnp.asarray(
+            arrived.shape[0] if n_expected is None else n_expected,
+            jnp.float32,
+        )
+        need = jnp.maximum(jnp.ceil(quorum_frac * n_exp), 1.0)
+        w_norm = w_norm * (m.sum() >= need).astype(jnp.float32)
 
     def merge(leaf_delta, g, res=None):
         if res is None:

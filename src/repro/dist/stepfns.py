@@ -263,7 +263,9 @@ def make_async_round_step(cfg: ModelConfig, compress: Optional[str] = None,
                           topk_frac: float = 0.05,
                           error_feedback: bool = False,
                           server_lr: float = 1.0,
-                          staleness_power: float = 0.5) -> Callable:
+                          staleness_power: float = 0.5,
+                          quorum_frac: Optional[float] = None,
+                          quorum_expected: Optional[int] = None) -> Callable:
     """Buffered asynchronous aggregation (FedBuff) across the pod axis.
 
     ``async_step(state, astate, weights, arrived, staleness, frac,
@@ -290,6 +292,13 @@ def make_async_round_step(cfg: ModelConfig, compress: Optional[str] = None,
     ``residuals`` arg and returns ``(state, astate, residuals)`` —
     arrived pods' wire encodings run through the same error-feedback
     pipeline as the sync compressed round.
+
+    ``quorum_frac`` threads the in-graph quorum gate through to
+    ``fedops.fedbuff_pods``: with fewer than ``ceil(quorum_frac *
+    quorum_expected)`` arrivals (default ``n_pods``) the merge degrades
+    to the previous global model. Rejoining pods then resync to that
+    *unchanged* global — the degraded-round semantics of
+    ``repro.net.timeline``'s ``quorum_met=False`` rounds.
     """
     scheme = fedops.check_scheme(compress)
 
@@ -307,6 +316,7 @@ def make_async_round_step(cfg: ModelConfig, compress: Optional[str] = None,
             server_lr=server_lr, scheme=scheme, topk_frac=topk_frac,
             staleness_power=staleness_power, frac=frac,
             residuals=residuals,
+            quorum_frac=quorum_frac, n_expected=quorum_expected,
         )
         new_global, new_res = merged if error_feedback else (merged, None)
         take = lambda new, old: jax.tree.map(  # noqa: E731

@@ -1,0 +1,25 @@
+"""Deterministic, counter-based fault injection for the co-simulation.
+
+See ``repro.faults.model`` (the fault/retry model) and
+``repro.faults.streams`` (the threefry-keyed decision streams).
+"""
+from repro.faults.model import FaultSchedule, RetryPolicy
+from repro.faults.streams import (
+    FAULT_DROPOUT,
+    FAULT_LOSS,
+    FAULT_OUTAGE,
+    fault_fingerprint,
+    fault_key,
+    fault_uniforms,
+)
+
+__all__ = [
+    "FaultSchedule",
+    "RetryPolicy",
+    "FAULT_DROPOUT",
+    "FAULT_LOSS",
+    "FAULT_OUTAGE",
+    "fault_fingerprint",
+    "fault_key",
+    "fault_uniforms",
+]

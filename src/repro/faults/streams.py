@@ -1,0 +1,91 @@
+"""Counter-based fault streams: threefry uniforms keyed per fault event.
+
+The fault subsystem follows the same determinism contract as the
+background-traffic sampler (``repro.kernels.traffic``): every fault
+decision is a pure function of ``(seed, fault_class, round, entity)``
+(entity = client id for dropout/loss draws, PON index for outage
+windows), evaluated through the same vectorised Threefry-2x32 core.
+Streams are therefore
+
+* **O(1)-seekable** — round ``r``'s draws are addressed directly, no
+  sequential RNG state, so a resumed or re-run round sees identical
+  faults;
+* **chunk-invariant** — drawing one entity or a batch of entities
+  yields the same values per entity (pinned by
+  ``tests/test_faults.py``);
+* **fold-invariant** — the folded timeline (round axis in the batch
+  axis) and the sequential/reference loops consult the identical
+  stream.
+
+Key derivation mirrors ``make_stream_key``: the seed fills one key
+word, the fault class Weyl-shifts both words, and the per-case seed
+mixes in through a third Weyl constant — all constants distinct from
+the traffic sampler's, so a fault stream can never alias an arrival
+stream.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.kernels.traffic.ops import threefry2x32_np
+
+_MASK32 = 0xFFFFFFFF
+
+# fault classes (the stream key's class word)
+FAULT_DROPOUT = 0                 # client dies mid-upload
+FAULT_OUTAGE = 1                  # ONU/link outage window (per PON)
+FAULT_LOSS = 2                    # update payload lost/corrupted
+
+# Weyl constants: golden ratio / murmur3 fmix / splitmix increments —
+# deliberately distinct from the traffic sampler's _PON_WEYL_* pair
+_CLASS_WEYL_0 = 0x9E3779B9
+_CLASS_WEYL_1 = 0x85EBCA6B
+_CASE_WEYL = 0x6C8E9CF5
+
+_INV_2_32 = float(2.0 ** -32)
+
+
+def fault_key(seed: int, fault_class: int, case_seed: int = 0,
+              ) -> Tuple[int, int]:
+    """uint32 key words for one ``(seed, fault_class, case)`` stream."""
+    eff = (int(seed) + int(case_seed) * _CASE_WEYL) & _MASK32
+    k0 = (eff + int(fault_class) * _CLASS_WEYL_0) & _MASK32
+    k1 = ((int(fault_class) + 1) * _CLASS_WEYL_1) & _MASK32
+    return k0, k1
+
+
+def fault_uniforms(seed: int, fault_class: int, round_index: int,
+                   entity, case_seed: int = 0,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Two independent uniforms in (0, 1) per ``(round, entity)`` event.
+
+    ``entity`` is an int or int array (client ids, or PON indices);
+    the return matches its shape. The open-interval mapping
+    ``(x + 0.5) * 2^-32`` guarantees ``rate=0.0`` never fires and
+    ``rate=1.0`` always fires regardless of the raw 32-bit word.
+    """
+    ent = np.atleast_1d(np.asarray(entity, np.int64))
+    k0, k1 = fault_key(seed, fault_class, case_seed)
+    c0 = np.full(ent.shape, int(round_index) & _MASK32, np.uint32)
+    c1 = (ent & _MASK32).astype(np.uint32)
+    x0, x1 = threefry2x32_np(np.uint32(k0), np.uint32(k1), c0, c1)
+    u0 = (x0.astype(np.float64) + 0.5) * _INV_2_32
+    u1 = (x1.astype(np.float64) + 0.5) * _INV_2_32
+    if np.ndim(entity) == 0:
+        return float(u0[0]), float(u1[0])
+    return u0, u1
+
+
+def fault_fingerprint(seed: int, fault_class: int, round_index: int,
+                      n_entities: int, case_seed: int = 0) -> int:
+    """XOR-reduced raw stream words over entities ``0..n-1`` — a cheap
+    pinned regression value for the stream's exact bits."""
+    ent = np.arange(n_entities, dtype=np.int64)
+    k0, k1 = fault_key(seed, fault_class, case_seed)
+    c0 = np.full(ent.shape, int(round_index) & _MASK32, np.uint32)
+    c1 = (ent & _MASK32).astype(np.uint32)
+    x0, x1 = threefry2x32_np(np.uint32(k0), np.uint32(k1), c0, c1)
+    words = (x0.astype(np.uint64) << np.uint64(32)) | x1.astype(np.uint64)
+    return int(np.bitwise_xor.reduce(words))

@@ -131,6 +131,46 @@ def fedbuff_merge(global_params, deltas: Sequence,
     return jax.tree.map(step, global_params, *deltas)
 
 
+def quorum_threshold(n_expected: int, quorum_frac: float) -> int:
+    """Minimum arrived-update count for a round to commit:
+    ``max(1, ceil(quorum_frac * n_expected))``."""
+    import math
+
+    if n_expected < 0:
+        raise ValueError("n_expected must be >= 0")
+    if not 0.0 < quorum_frac <= 1.0:
+        raise ValueError(f"quorum_frac must be in (0, 1]; got {quorum_frac}")
+    return max(1, math.ceil(quorum_frac * n_expected))
+
+
+def quorum_commit(global_params, deltas: Sequence,
+                  weights: Sequence[float], *,
+                  n_expected: int, quorum_frac: float,
+                  staleness: Optional[Sequence[float]] = None,
+                  fracs: Optional[Sequence[float]] = None,
+                  server_lr: float = 1.0,
+                  staleness_power: float = 0.5):
+    """Quorum-gated merge: ``(new_global, quorum_met)``.
+
+    With at least ``quorum_threshold(n_expected, quorum_frac)`` arrived
+    updates the round commits through ``fedbuff_merge``; below the
+    quorum the round *degrades* — the previous global model is returned
+    unchanged (``quorum_met=False``) and the arrived updates are
+    discarded, mirroring the timeline's ``quorum_met=False`` rounds
+    (which only occur after ``quorum_max_extends`` deadline doublings).
+    Host-side mirror of the in-graph gate in
+    ``repro.dist.fedops.fedbuff_pods``.
+    """
+    deltas = list(deltas)
+    if len(deltas) < quorum_threshold(n_expected, quorum_frac):
+        return global_params, False
+    return fedbuff_merge(
+        global_params, deltas, weights, staleness=staleness,
+        server_lr=server_lr, staleness_power=staleness_power,
+        fracs=fracs,
+    ), True
+
+
 @dataclass
 class FedBuffAggregator:
     """Asynchronous aggregation (FedBuff): apply once K updates buffered.

@@ -30,6 +30,9 @@ class RoundLog:
     update_bits: float
     eval_metric: Optional[float] = None
     sync_time_s: Optional[float] = None
+    # quorum aggregation: None = no quorum configured; False = the round
+    # degraded to the previous global model (too few arrivals)
+    quorum_met: Optional[bool] = None
 
 
 @dataclass
@@ -159,6 +162,8 @@ class CPSServer:
         items: Sequence,
         eval_fn: Optional[Callable] = None,
         server_lr: float = 1.0,
+        n_expected: Optional[int] = None,
+        quorum_frac: Optional[float] = None,
     ) -> RoundLog:
         """One aggregation event: merge the arrived updates.
 
@@ -170,10 +175,24 @@ class CPSServer:
         (``fedbuff_merge`` — data weights mix relatively, the discounts
         apply absolutely); an empty event only advances the round
         counter (the deadline fired with nothing aggregated).
+
+        ``quorum_frac`` (with ``n_expected`` pending uploads) gates the
+        merge: fewer than ``quorum_threshold(n_expected, quorum_frac)``
+        arrivals and the round degrades — the global model stands
+        unchanged and the log records ``quorum_met=False``.
         """
+        from repro.fl.aggregation import quorum_threshold
+
         items = list(items)
         self._round += 1
-        if items:
+        quorum_met: Optional[bool] = None
+        if quorum_frac is not None:
+            if n_expected is None:
+                raise ValueError("quorum_frac needs n_expected")
+            quorum_met = (
+                len(items) >= quorum_threshold(n_expected, quorum_frac)
+            )
+        if items and quorum_met is not False:
             self.global_params = fedbuff_merge(
                 self.global_params,
                 [u.delta for u, _, _ in items],
@@ -192,6 +211,7 @@ class CPSServer:
             eval_metric=(
                 float(eval_fn(self.global_params)) if eval_fn else None
             ),
+            quorum_met=quorum_met,
         )
         self.history.append(log)
         return log

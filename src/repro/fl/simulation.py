@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.slicing import ClientProfile
+from repro.faults import FaultSchedule, RetryPolicy
 from repro.net.engine import SweepCase, simulate_round_sweep
 from repro.net.multi_pon import MultiPonTopology
 from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
@@ -58,6 +59,13 @@ class CoSimConfig:
     # network simulation this co-sim drives; None (the default) leaves
     # all outputs bitwise identical to an uninstrumented run
     collector: Optional[object] = None
+    # deterministic fault injection (repro.faults): dropout/loss faults
+    # and quorum aggregation need the *coupled* deadline/async path
+    # (who retries/arrives is an event); outage-only faults also thread
+    # into the decoupled timeline timing
+    faults: Optional[FaultSchedule] = None
+    retry: Optional[RetryPolicy] = None
+    quorum_frac: Optional[float] = None
 
     @classmethod
     def from_fed_model(cls, model_cfg, compress: str = "int8", **kw):
@@ -193,6 +201,7 @@ class FLNetworkCoSim:
         schedule = TimelineSchedule(
             n_rounds=R, membership=membership,
             m_ud_bits=np.asarray(m_bits),
+            faults=self.cfg.faults,
         )
         results = simulate_timeline_sweep(
             self.cfg.pon,
@@ -231,6 +240,15 @@ class FLNetworkCoSim:
         the coupled path follows one arrival realization —
         ``timing_seeds`` must be 1 (the decoupled path averages sync
         times over seeds; arrival sets cannot be averaged).
+
+        Fault injection (``cfg.faults``) rides the same timeline: a
+        dropout/loss victim's trained update stays pending while its
+        retransmission is in flight (it does NOT retrain — the retry
+        re-sends the same payload), a ``gave_up`` client abandons the
+        pending update and trains fresh at its next entry, and
+        ``cfg.quorum_frac`` gates each aggregation event
+        (``CPSServer.apply_updates`` degrades to the previous global
+        model below quorum).
         """
         if self.cfg.timing_seeds != 1:
             raise ValueError(
@@ -245,6 +263,8 @@ class FLNetworkCoSim:
         schedule = TimelineSchedule(
             n_rounds=n_rounds, deadline_s=deadline_s,
             deadline_policy=deadline_policy, buffer_k=buffer_k,
+            faults=self.cfg.faults, retry=self.cfg.retry,
+            quorum_frac=self.cfg.quorum_frac,
         )
         net = simulate_timeline_sweep(
             self.cfg.pon,
@@ -279,7 +299,17 @@ class FLNetworkCoSim:
                     items.append((u, 0, frac))
             for cid in rnd.dropped:
                 pending.pop(cid, None)
-            log = self.server.apply_updates(items, eval_fn=eval_fn)
+            # fault outcomes: failed (dropout) and lost (corrupted)
+            # clients keep their trained update pending — the retry
+            # re-sends the same payload; a gave_up client abandons it
+            for cid in rnd.gave_up:
+                pending.pop(cid, None)
+            log = self.server.apply_updates(
+                items, eval_fn=eval_fn,
+                n_expected=(len(rnd.ul_bits)
+                            if self.cfg.quorum_frac is not None else None),
+                quorum_frac=self.cfg.quorum_frac,
+            )
             log.sync_time_s = rnd.sync_time
             total_time += rnd.sync_time
             if self._collector is not None:
@@ -289,6 +319,9 @@ class FLNetworkCoSim:
                     n_deferred=len(rnd.deferred),
                     n_dropped=len(rnd.dropped),
                     n_partial=len(rnd.partial),
+                    n_failed=len(rnd.failed),
+                    n_lost=len(rnd.lost),
+                    quorum_met=rnd.quorum_met,
                     payload_bits=float(sum(rnd.ul_bits.values())),
                 )
             rounds.append(
@@ -299,6 +332,9 @@ class FLNetworkCoSim:
                     "sync_time_s": rnd.sync_time,
                     "n_arrived": log.n_arrived,
                     "staleness": dict(rnd.staleness),
+                    "n_failed": len(rnd.failed),
+                    "n_lost": len(rnd.lost),
+                    "quorum_met": log.quorum_met,
                 }
             )
         return CoSimResult(
@@ -356,7 +392,24 @@ class FLNetworkCoSim:
             # where --async-buffer alone enables FedBuff); combining it
             # with a deadline fails in TimelineSchedule's validation
             mode = "async"
-        if mode == "async" or deadline_s is not None:
+        coupled = mode == "async" or deadline_s is not None
+        if not coupled:
+            if (self.cfg.faults is not None
+                    and self.cfg.faults.couples_rounds):
+                raise ValueError(
+                    "dropout/loss fault injection decides who retries "
+                    "and who arrives per round — an event, not a "
+                    "timing average; use the coupled path (deadline_s "
+                    "or mode='async'). Outage-only faults are fine "
+                    "decoupled."
+                )
+            if self.cfg.quorum_frac is not None:
+                raise ValueError(
+                    "quorum aggregation gates per-round arrivals; use "
+                    "the coupled path (deadline_s, per "
+                    "TimelineSchedule's quorum validation)"
+                )
+        if coupled:
             if update_bits_from_compression:
                 raise ValueError(
                     "update_bits_from_compression needs the decoupled "

@@ -29,6 +29,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core.slicing import ClientProfile
+from repro.faults import FaultSchedule
 from repro.data import TokenBatcher, lm_tokens
 from repro.dist import stepfns
 from repro.launch.mesh import make_host_mesh
@@ -63,6 +64,12 @@ def train(
     log_jsonl: Optional[str] = None,
     trace_path: Optional[str] = None,
     collector=None,
+    resume: bool = True,
+    dropout_rate: float = 0.0,
+    outage_rate: float = 0.0,
+    loss_rate: float = 0.0,
+    fault_seed: int = 0,
+    quorum: Optional[float] = None,
 ):
     from repro.obs import Collector, EventLog, SpanTracer
     from repro.obs.trace import maybe_span
@@ -114,15 +121,42 @@ def train(
             step = jax.jit(stepfns.make_train_step(cfg, opt_cfg, schedule))
             round_step = None
 
+        # deadline/async rounds: not every pod's update reaches every
+        # aggregation — the buffered staleness-weighted round step is
+        # driven from the simulated arrivals instead of the plain
+        # FedAvg. Built BEFORE restore so the checkpoint template
+        # matches what gets saved (train + async state as one tree).
+        coupled = fed and (deadline_s is not None or async_buffer is not None)
+        if coupled:
+            astate = stepfns.init_async_state(state)
+            around = jax.jit(
+                stepfns.make_async_round_step(
+                    cfg, compress=compress, quorum_frac=quorum,
+                    quorum_expected=pods if quorum is not None else None,
+                )
+            )
+
         mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
         start_round = 0
-        if mgr is not None:
-            restored = mgr.restore_latest(like=state)
+        if mgr is not None and resume:
+            template = {"train": state, "async": astate} if coupled else state
+            restored = mgr.restore_latest(like=template)
             if restored is not None:
-                state, meta = restored
+                tree, meta = restored
+                if coupled:
+                    state, astate = tree["train"], tree["async"]
+                else:
+                    state = tree
                 start_round = int(meta.get("round", 0))
                 log.emit("resume", echo="resumed from round {round}",
                          round=start_round)
+                # fast-forward the deterministic data streams to where
+                # the checkpointed run stopped — a resumed run must
+                # consume the same batch sequence as an uninterrupted
+                # one (TokenBatcher is a pure function of its seed)
+                for _ in range(start_round * steps_per_round):
+                    for g in iters:
+                        next(g)
 
         # PON timing for the round (the paper's co-simulation); the slice
         # is sized for the measured payloads, not the paper's CNN
@@ -156,9 +190,18 @@ def train(
         # one stacked multi-round timeline provides every round's sync
         # time (per-round arrival streams, not one number reused R times);
         # deadlines/async cut rounds short and hand arrivals + staleness
-        # to the aggregation step below
+        # to the aggregation step below. ALWAYS the full schedule, even
+        # on resume: round r's counter streams are keyed by r, so a
+        # resumed run replays the identical network realization and
+        # lands on the same final params as an uninterrupted one.
+        faults = None
+        if dropout_rate > 0.0 or outage_rate > 0.0 or loss_rate > 0.0:
+            faults = FaultSchedule(
+                seed=fault_seed, dropout_rate=dropout_rate,
+                outage_rate=outage_rate, loss_rate=loss_rate,
+            )
         wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
-        n_net_rounds = max(rounds - start_round, 1)
+        n_net_rounds = max(rounds, 1)
         with maybe_span(collector, "net:timeline", rounds=n_net_rounds):
             timeline = simulate_timeline_sweep(
                 pon,
@@ -167,21 +210,22 @@ def train(
                 TimelineSchedule(n_rounds=n_net_rounds,
                                  deadline_s=deadline_s,
                                  deadline_policy=deadline_policy,
-                                 buffer_k=async_buffer),
+                                 buffer_k=async_buffer,
+                                 faults=faults,
+                                 quorum_frac=quorum),
                 collector=collector,
             )[0]
         sync_times = timeline.sync_times
-        # deadline/async rounds: not every pod's update reaches every
-        # aggregation — drive the buffered staleness-weighted round step
-        # from the simulated arrivals instead of the plain FedAvg
-        coupled = fed and (deadline_s is not None or async_buffer is not None)
-        if coupled:
-            astate = stepfns.init_async_state(state)
-            around = jax.jit(
-                stepfns.make_async_round_step(cfg, compress=compress)
-            )
 
         wall_simulated = 0.0
+        # pods whose failed upload is retrying (they re-enter the
+        # timeline as carriers and must NOT re-snapshot their payload);
+        # replayed over the pre-resume rounds so a resumed run holds
+        # the same fault bookkeeping as an uninterrupted one
+        in_retry: set = set()
+        for rn in timeline.rounds[:start_round]:
+            in_retry |= set(rn.failed) | set(rn.lost)
+            in_retry -= set(rn.arrived) | set(rn.gave_up)
         history = []
         for rnd in range(start_round, rounds):
             t0 = time.time()
@@ -209,11 +253,13 @@ def train(
             if fed:
                 weights = jnp.ones((pods,), jnp.float32)
                 if coupled:
-                    idx = min(rnd - start_round, len(timeline.rounds) - 1)
+                    idx = min(rnd, len(timeline.rounds) - 1)
                     rn = timeline.rounds[idx]
                     prev_def = (timeline.rounds[idx - 1].deferred
                                 if idx > 0 else {})
-                    fresh = set(rn.ul_bits) - set(prev_def)
+                    # a retry join is in ul_bits but not a fresh entry:
+                    # it re-sends its snapshotted payload unchanged
+                    fresh = set(rn.ul_bits) - set(prev_def) - in_retry
                     contrib = {cid: 1.0 for cid in rn.arrived}
                     contrib.update({cid: f for cid, f in rn.partial.items()
                                     if f > 0.0})
@@ -230,26 +276,30 @@ def train(
                             stale[cid] = rn.staleness.get(cid, 0)
                         # every cut pod re-enters fresh — including a
                         # partial pod whose served fraction was 0 (its
-                        # update is discarded exactly like a drop)
+                        # update is discarded exactly like a drop) and
+                        # a pod that gave up on its retries
                         if (cid in contrib or cid in rn.dropped
-                                or cid in rn.partial):
+                                or cid in rn.partial
+                                or cid in rn.gave_up):
                             rejoin[cid] = True
                     state, astate = around(
                         state, astate, weights, jnp.asarray(arrived),
                         jnp.asarray(stale), jnp.asarray(fracs),
                         jnp.asarray(snap), jnp.asarray(rejoin),
                     )
+                    in_retry |= set(rn.failed) | set(rn.lost)
+                    in_retry -= set(rn.arrived) | set(rn.gave_up)
                 else:
                     state = round_step(state, weights)
-            sync = float(sync_times[min(rnd - start_round,
-                                        len(sync_times) - 1)])
+            sync = float(sync_times[min(rnd, len(sync_times) - 1)])
             wall_simulated += sync
             entry = {"round": rnd, "loss": float(np.mean(losses)),
                      "sync_s": sync, "wall_s": time.time() - t0}
             history.append(entry)
             log.emit("round", **entry)
             if mgr is not None:
-                mgr.save(rnd + 1, state, metadata={"round": rnd + 1})
+                tree = {"train": state, "async": astate} if coupled else state
+                mgr.save(rnd + 1, tree, metadata={"round": rnd + 1})
         if mgr is not None:
             mgr.wait()
         if history:
@@ -312,6 +362,28 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="write a Chrome-trace JSON of the run's spans "
                          "to this path (view in Perfetto)")
+    ap.add_argument("--resume", dest="resume", action="store_true",
+                    default=True,
+                    help="resume from the latest checkpoint in "
+                         "--ckpt-dir (the default); a resumed run "
+                         "reproduces an uninterrupted run exactly")
+    ap.add_argument("--no-resume", dest="resume", action="store_false",
+                    help="ignore existing checkpoints and start fresh")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round client dropout probability "
+                         "(deterministic counter-based fault stream)")
+    ap.add_argument("--outage-rate", type=float, default=0.0,
+                    help="per-round probability of an upstream "
+                         "link-outage window per PON")
+    ap.add_argument("--loss-rate", type=float, default=0.0,
+                    help="per-round probability a completed upload's "
+                         "payload arrives corrupted")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault-injection streams")
+    ap.add_argument("--quorum", type=float, default=None,
+                    help="quorum aggregation: a round commits only "
+                         "when at least this fraction of pending "
+                         "uploads arrived (needs --deadline)")
     args = ap.parse_args(argv)
     train(
         arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
@@ -322,6 +394,10 @@ def main(argv=None):
         deadline_s=args.deadline, deadline_policy=args.deadline_policy,
         async_buffer=args.async_buffer,
         log_jsonl=args.log_jsonl, trace_path=args.trace,
+        resume=args.resume,
+        dropout_rate=args.dropout_rate, outage_rate=args.outage_rate,
+        loss_rate=args.loss_rate, fault_seed=args.fault_seed,
+        quorum=args.quorum,
     )
 
 

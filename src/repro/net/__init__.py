@@ -1,4 +1,8 @@
 """PON network substrate: traffic, DBA engines, round + timeline sims."""
+from repro.faults import (  # noqa: F401  (re-export: timeline fault model)
+    FaultSchedule,
+    RetryPolicy,
+)
 from repro.net.engine import (  # noqa: F401
     SweepCase,
     simulate_round_sweep,

@@ -614,6 +614,7 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                cap_row: Optional[np.ndarray] = None,
                cps_cap: Optional[float] = None, n_pons: int = 1,
                deadline_row: Optional[np.ndarray] = None,
+               outage_row: Optional[np.ndarray] = None,
                collector=None, phase_label: str = ""):
     """One transfer phase for a (policy-homogeneous) batch of rows.
 
@@ -641,6 +642,13 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     ``max_t``-capped ``fill_unfinished`` behaviour. All ``n_pons``
     rows of one case must share a deadline (the CPS waterfill couples
     them).
+
+    ``outage_row`` (``(B, 2)`` float ``[start, end)``, ``inf`` rows =
+    never) masks each row's capacity to zero for cycles starting
+    inside its outage window (``start <= t < end`` on the cycle-start
+    clock, exactly the deadline comparison): the ONU/link is dark —
+    arrivals still queue, nothing is granted — and service resumes
+    after the window. ``None`` is bitwise identical to all-``inf``.
 
     ``collector`` (``repro.obs.Collector``) turns on per-cycle metrics
     over the ``(B,)`` row axis — backlog depths, grant totals, cycle
@@ -693,6 +701,10 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
             if not np.any(alive[:, None] & lay.part & ~done):
                 break
             cap_cyc = np.where(alive, cap_col, 0.0)
+        if outage_row is not None:
+            base = cap_cyc if cap_t is not None else cap_col
+            dark = (outage_row[:, 0] <= t) & (t < outage_row[:, 1])
+            cap_cyc = np.where(dark, 0.0, base)
         if use_bg:
             bg.push(k, stream.row(k))
         if n_wait:
@@ -867,6 +879,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                          t_round_hint: float = 10.0,
                          max_t: float = 600.0,
                          ul_deadline_s=None,
+                         ul_outage_s=None,
                          collector=None,
                          ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
@@ -894,6 +907,15 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     gives each case its OWN deadline (``None``/``inf`` entries =
     no deadline for that case) — the timeline's folded drop/partial
     rows and the async mode's per-case k-th-completion cutoffs.
+
+    ``ul_outage_s`` injects per-case upstream ONU/link outage windows
+    (``repro.faults``): a sequence of ``None`` (no outage), ``(2,)``
+    ``[start, end)`` (every PON of the case), or ``(n_pons, 2)``
+    per-PON windows, phase-relative seconds like the deadlines. During
+    a window the affected rows' cycle capacity is masked to zero (the
+    link is dark; arrivals still queue) — one more per-row array axis,
+    exactly like the per-case deadline column. ``None`` (the default)
+    is bitwise identical to all-``inf`` windows.
 
     ``collector`` (``repro.obs.Collector``, optional) records per-phase
     cycle metrics inside ``_run_phase`` plus per-case upload-completion
@@ -948,6 +970,30 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     else:
         dl_case = dl_row = None
         ul_max_t = max_t if ul_deadline_s is None else ul_deadline_s
+    if ul_outage_s is not None:
+        if len(ul_outage_s) != B:
+            raise ValueError(
+                f"per-case ul_outage_s needs {B} entries; "
+                f"got {len(ul_outage_s)}"
+            )
+        outage_row = np.full((B, P, 2), np.inf)
+        for b, win in enumerate(ul_outage_s):
+            if win is None:
+                continue
+            arr = np.asarray(win, np.float64)
+            if arr.shape == (2,):
+                arr = np.broadcast_to(arr, (P, 2))
+            if arr.shape != (P, 2):
+                raise ValueError(
+                    f"ul_outage_s[{b}] must be (2,) or ({P}, 2); "
+                    f"got shape {arr.shape}"
+                )
+            outage_row[b] = arr
+        outage_row = outage_row.reshape(R, 2)
+        if not np.isfinite(outage_row[:, 0]).any():
+            outage_row = None       # all-inf: keep the bitwise-off path
+    else:
+        outage_row = None
     no_dl = np.zeros((R, lay.n_clients), bool)
     for b, case in enumerate(cases):
         if case.no_dl_ids:
@@ -1034,6 +1080,8 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
                 cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
                 deadline_row=None if dl_row is None else dl_row[fcfs_rows],
+                outage_row=(None if outage_row is None
+                            else outage_row[fcfs_rows]),
                 collector=collector, phase_label="ul:fcfs",
             )
     if len(bs_rows):
@@ -1072,6 +1120,8 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 fill_unfinished=ul_deadline_s is None,
                 cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,
                 deadline_row=None if dl_row is None else dl_row[bs_rows],
+                outage_row=(None if outage_row is None
+                            else outage_row[bs_rows]),
                 collector=collector, phase_label="ul:bs",
             )
 

@@ -207,6 +207,7 @@ def simulate_multi_pon_round(
     t_round_hint: float = 10.0,
     max_t: float = 600.0,
     ul_deadline_s: Optional[float] = None,
+    ul_outage_s: Optional[np.ndarray] = None,
     no_dl_ids=frozenset(),
     stream_round: int = 0,
     collector=None,
@@ -222,6 +223,12 @@ def simulate_multi_pon_round(
     ``(seed, phase, stream_round, pon)``.  Semantics of everything
     else (FIFO queues, credit attribution, deadlines, carriers that
     skip the download) match ``repro.net.sim`` exactly.
+
+    ``ul_outage_s`` (``(n_pons, 2)`` ``[start, end)`` windows, or
+    ``(2,)`` applied to every PON; ``inf`` = never) darkens a PON's
+    upstream during its window: its raw grant is empty — so the CPS
+    waterfill sees zero demand from it — while arrivals still queue;
+    exactly the engine's per-row capacity masking.
 
     ``collector`` (``repro.obs.Collector``, optional) records the CPS
     waterfill per-PON want/eff bits, per-cycle CPS uplink utilization
@@ -250,6 +257,19 @@ def simulate_multi_pon_round(
     cyc = cfg.cycle_time_s
     prop = cfg.propagation_s
     skip = frozenset(no_dl_ids)
+    if ul_outage_s is not None:
+        outage = np.asarray(ul_outage_s, np.float64)
+        if outage.shape == (2,):
+            outage = np.broadcast_to(outage, (P, 2))
+        if outage.shape != (P, 2):
+            raise ValueError(
+                f"ul_outage_s must be (2,) or ({P}, 2); "
+                f"got shape {outage.shape}"
+            )
+        if not np.isfinite(outage[:, 0]).any():
+            outage = None
+    else:
+        outage = None
 
     def _cps_grants(raws, regrant):
         if cps_cap is None:
@@ -275,7 +295,14 @@ def simulate_multi_pon_round(
                     served = q.serve(g["fl"], kind="fl")
                     _credit(served, remaining, done, t, cfg)
 
-    def _fcfs_phase(bits0, ready, phase_idx, max_t_p, deadline):
+    def _dark(p: int, t: float, windows) -> bool:
+        """PON ``p``'s upstream is in its outage window at cycle start
+        ``t`` (same comparison as the engine's capacity mask)."""
+        return (windows is not None
+                and windows[p, 0] <= t < windows[p, 1])
+
+    def _fcfs_phase(bits0, ready, phase_idx, max_t_p, deadline,
+                    windows=None):
         queues = [[OnuQueue(i) for i in range(n_local)] for _ in range(P)]
         dbas = [FCFSBestEffort(float(rates[p]), cyc, n_local,
                                cfg.efficiency) for p in range(P)]
@@ -299,7 +326,8 @@ def simulate_multi_pon_round(
             for p in range(P):
                 for q, src in zip(queues[p], sources[p]):
                     q.push("bg", src.arrivals(cyc), t)
-            raws = [dbas[p].grant(queues[p]) for p in range(P)]
+            raws = [{} if _dark(p, t, windows)
+                    else dbas[p].grant(queues[p]) for p in range(P)]
             grants_all = _cps_grants(
                 raws, lambda p, e: dbas[p].grant(queues[p], cap_bits=e)
             )
@@ -317,7 +345,8 @@ def simulate_multi_pon_round(
                 done[cid] = float("nan")
         return done, dict(remaining)
 
-    def _bs_phase(bits0, ready, dl_done, max_t_p, deadline):
+    def _bs_phase(bits0, ready, dl_done, max_t_p, deadline,
+                  windows=None):
         # The slice is a reserved T-CONT end to end (PON slot + CPS
         # priority); background rides the residual CPS capacity and
         # never feeds back into FL service, so — exactly as in the
@@ -361,7 +390,8 @@ def simulate_multi_pon_round(
                         ("fl", cid), remaining[cid], max(t_ready, t)
                     )
                     del pending[cid]
-            raws = [dbas[p].grant(queues[p], t) if dbas[p] else {}
+            raws = [dbas[p].grant(queues[p], t)
+                    if dbas[p] and not _dark(p, t, windows) else {}
                     for p in range(P)]
             grants_all = _cps_grants(
                 raws,
@@ -408,11 +438,13 @@ def simulate_multi_pon_round(
     specs: Dict[int, object] = {}
     if policy == "bs":
         ul_done, ul_remaining, specs = _bs_phase(
-            bits_ul, dict(ready), dl_done, ul_max_t, ul_deadline_s
+            bits_ul, dict(ready), dl_done, ul_max_t, ul_deadline_s,
+            windows=outage,
         )
     else:
         ul_done, ul_remaining = _fcfs_phase(
-            bits_ul, dict(ready), 1, ul_max_t, ul_deadline_s
+            bits_ul, dict(ready), 1, ul_max_t, ul_deadline_s,
+            windows=outage,
         )
 
     if ul_remaining and ul_deadline_s is not None:

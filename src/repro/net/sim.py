@@ -189,6 +189,7 @@ def _upstream_phase(
     max_t: float = 600.0,
     sources=None,
     deadline_s: Optional[float] = None,
+    outage_s: Optional[Tuple[float, float]] = None,
 ) -> Tuple[Dict[int, float], Dict[int, float]]:
     """Upload phase; returns (per-client upload-done time, bits still
     queued at the cutoff).
@@ -196,9 +197,16 @@ def _upstream_phase(
     With ``deadline_s`` the phase stops at the round deadline and the
     unfinished clients' remaining bits are reported instead of being
     timed out at ``max_t`` (the multi-round deferral hook).
+
+    ``outage_s`` (``(start, end)`` phase-relative seconds) is an
+    ONU/link outage window: cycles starting inside it grant nothing —
+    arrivals (background and newly-ready clients) still queue, service
+    resumes after the window. Matches the engine's per-row capacity
+    masking rule (``start <= t < end`` on the cycle-start clock).
     """
     if deadline_s is not None:
         max_t = deadline_s
+    o_start, o_end = outage_s if outage_s is not None else (np.inf, np.inf)
     clients = workload.clients
     queues = [OnuQueue(i) for i in range(cfg.n_onus)]
     qmap = {q.onu_id: q for q in queues}
@@ -230,6 +238,9 @@ def _upstream_phase(
                 )
                 del pending[cid]
         _bg_push(queues, sources, t, cfg.cycle_time_s)
+        if o_start <= t < o_end:
+            t += cfg.cycle_time_s
+            continue                # link dark: no grants this cycle
         grants = (
             dba.grant(queues, t) if dba_mode == "bs" else dba.grant(queues)
         )
@@ -262,6 +273,7 @@ def simulate_round(
     _dl_sources=None,
     _ul_sources=None,
     ul_deadline_s: Optional[float] = None,
+    ul_outage_s=None,
     no_dl_ids=frozenset(),
     stream_round: int = 0,
     topology=None,
@@ -280,9 +292,11 @@ def simulate_round(
 
     ``ul_deadline_s`` cuts the upload phase at a round deadline
     (unfinished bits come back in ``RoundResult.ul_remaining``);
-    ``no_dl_ids`` marks deadline carriers that skip the model download;
-    ``stream_round`` keys the engine's arrival stream for multi-round
-    timelines.
+    ``ul_outage_s`` (``(start, end)`` seconds, or ``(n_pons, 2)`` per
+    PON under a topology) masks upstream capacity during an ONU/link
+    outage window (``repro.faults``); ``no_dl_ids`` marks deadline
+    carriers that skip the model download; ``stream_round`` keys the
+    engine's arrival stream for multi-round timelines.
 
     ``topology`` (``repro.net.multi_pon.MultiPonTopology``) stacks the
     round over several wavelength segments sharing a CPS uplink; the
@@ -304,6 +318,7 @@ def simulate_round(
                        topology=topology)],
             t_round_hint=t_round_hint,
             ul_deadline_s=ul_deadline_s,
+            ul_outage_s=None if ul_outage_s is None else [ul_outage_s],
         )[0]
     if topology is not None and not topology.trivial:
         from repro.net.multi_pon import simulate_multi_pon_round
@@ -316,6 +331,7 @@ def simulate_round(
         return simulate_multi_pon_round(
             cfg, topology, workload, total_load, policy, seed=seed,
             t_round_hint=t_round_hint, ul_deadline_s=ul_deadline_s,
+            ul_outage_s=ul_outage_s,
             no_dl_ids=frozenset(no_dl_ids), stream_round=stream_round,
         )
 
@@ -330,6 +346,14 @@ def simulate_round(
     bg_rate = background_rate_for_load(
         total_load, cfg.line_rate_bps, training_rate
     )
+
+    if ul_outage_s is not None:
+        win = np.asarray(ul_outage_s, np.float64).reshape(-1)
+        if win.size != 2:
+            raise ValueError(
+                "single-PON ul_outage_s must be one (start, end) window"
+            )
+        ul_outage_s = (float(win[0]), float(win[1]))
 
     dl_done = _downstream_phase(
         cfg, workload, bg_rate, rng, reserved=(policy == "bs"),
@@ -358,11 +382,13 @@ def simulate_round(
         ul_done, ul_remaining = _upstream_phase(
             cfg, workload, ready, bg_rate, rng, "bs", spec, slots,
             sources=_ul_sources, deadline_s=ul_deadline_s,
+            outage_s=ul_outage_s,
         )
     else:
         ul_done, ul_remaining = _upstream_phase(
             cfg, workload, ready, bg_rate, rng, "fcfs",
             sources=_ul_sources, deadline_s=ul_deadline_s,
+            outage_s=ul_outage_s,
         )
 
     if ul_remaining and ul_deadline_s is not None:

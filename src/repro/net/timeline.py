@@ -60,10 +60,11 @@ elastic membership and multi-PON topologies.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.faults import FaultSchedule, RetryPolicy
 from repro.net.engine import SweepCase, simulate_round_sweep
 from repro.net.sim import FLRoundWorkload, RoundResult
 
@@ -107,6 +108,30 @@ class TimelineSchedule:
     None) and fire each round's aggregation as soon as ``buffer_k``
     pending uploads complete; stragglers defer with staleness.
 
+    ``faults`` (``repro.faults.FaultSchedule``): deterministic client
+    dropout, upstream ONU/link outage windows and payload loss drawn
+    from counter-based streams. Failed uploads retransmit under
+    ``retry`` (``repro.faults.RetryPolicy``; defaults to
+    ``RetryPolicy()`` when faults can fail uploads): the client backs
+    off for ``delay_rounds(attempt)`` rounds — during which it is *not*
+    re-admitted by the membership mask; retry suppression overrides the
+    mask exactly like deferred carriers do, so a masked-in client can
+    never hold two uploads in flight — then re-enters like a carrier
+    (no fresh download, zero compute, full pending bits). Past
+    ``max_retries`` it abandons the update and re-enters fresh through
+    membership. A ``trivial`` fault schedule is bitwise identical to
+    ``faults=None``.
+
+    ``quorum_frac``: quorum aggregation — a deadlined round commits
+    only when at least ``ceil(quorum_frac * n_pending)`` un-faulted
+    uploads arrived by the deadline; otherwise the round's deadline
+    doubles and the round re-runs (identical counter streams make the
+    rerun a superset of the first pass), up to ``quorum_max_extends``
+    times, after which the round reports ``quorum_met=False`` and the
+    learning layer degrades to the previous global model. Requires
+    ``deadline_s``; incompatible with ``buffer_k`` (async mode is its
+    own arrival quorum).
+
     All array inputs are normalised and defensively copied once at
     construction: later mutation of the caller's arrays cannot desync
     the folded engine from the sequential/reference loops (which would
@@ -119,6 +144,10 @@ class TimelineSchedule:
     deadline_s: Optional[object] = None
     deadline_policy: str = "defer"
     buffer_k: Optional[int] = None
+    faults: Optional[FaultSchedule] = None
+    retry: Optional[RetryPolicy] = None
+    quorum_frac: Optional[float] = None
+    quorum_max_extends: int = 2
 
     def __post_init__(self):
         if self.n_rounds < 1:
@@ -166,16 +195,63 @@ class TimelineSchedule:
                     "it cannot be combined with deadline_s"
                 )
             object.__setattr__(self, "buffer_k", int(self.buffer_k))
+        if self.faults is not None and not isinstance(
+            self.faults, FaultSchedule
+        ):
+            raise TypeError("faults must be a repro.faults.FaultSchedule")
+        if self.retry is not None and not isinstance(
+            self.retry, RetryPolicy
+        ):
+            raise TypeError("retry must be a repro.faults.RetryPolicy")
+        if self.quorum_frac is not None:
+            q = float(self.quorum_frac)
+            if not 0.0 < q <= 1.0:
+                raise ValueError(
+                    f"quorum_frac must be in (0, 1]; got {q}"
+                )
+            if self.buffer_k is not None:
+                raise ValueError(
+                    "async mode (buffer_k) is its own arrival quorum; "
+                    "it cannot be combined with quorum_frac"
+                )
+            if self.deadline_s is None:
+                raise ValueError(
+                    "quorum_frac needs deadline_s: without a deadline "
+                    "every pending upload always arrives"
+                )
+            object.__setattr__(self, "quorum_frac", q)
+        if int(self.quorum_max_extends) < 0:
+            raise ValueError("quorum_max_extends must be >= 0")
+        object.__setattr__(
+            self, "quorum_max_extends", int(self.quorum_max_extends)
+        )
 
     @property
     def asynchronous(self) -> bool:
         return self.buffer_k is not None
 
     @property
+    def active_faults(self) -> Optional[FaultSchedule]:
+        """The fault schedule, or None when absent/trivial — every
+        fault code path gates on this, which is what makes a trivial
+        ``FaultSchedule()`` bitwise identical to ``faults=None``."""
+        f = self.faults
+        return None if f is None or f.trivial else f
+
+    @property
+    def retry_policy(self) -> RetryPolicy:
+        return self.retry if self.retry is not None else RetryPolicy()
+
+    @property
     def couples_rounds(self) -> bool:
         """True when state crosses round boundaries (no folding)."""
-        return self.asynchronous or (
-            self.deadline_s is not None and self.deadline_policy == "defer"
+        faults = self.active_faults
+        return (
+            self.asynchronous
+            or (self.deadline_s is not None
+                and self.deadline_policy == "defer")
+            or (faults is not None and faults.couples_rounds)
+            or self.quorum_frac is not None
         )
 
     def deadline(self, r: int) -> Optional[float]:
@@ -211,6 +287,18 @@ class TimelineRound:
     # deadline_policy="partial": served fraction (usable partial update)
     # per client cut at the deadline
     partial: Dict[int, float] = field(default_factory=dict)
+    # fault outcomes (repro.faults): clients that died mid-upload this
+    # round (bits they served before dying — wasted wire time), and
+    # completed uploads whose payload arrived corrupted
+    failed: Dict[int, float] = field(default_factory=dict)
+    lost: List[int] = field(default_factory=list)
+    # failed clients' scheduled retransmission round / abandonments
+    retry_at: Dict[int, int] = field(default_factory=dict)
+    gave_up: List[int] = field(default_factory=list)
+    # quorum aggregation: whether the round met its arrival quorum
+    # (None = no quorum configured) and how often the deadline doubled
+    quorum_met: Optional[bool] = None
+    deadline_extensions: int = 0
 
 
 @dataclass
@@ -234,29 +322,97 @@ class TimelineResult:
 # ---------------------------------------------------------------------------
 
 
+class _RetryEntry(NamedTuple):
+    """An in-flight retransmission: due round + the bits to re-send."""
+
+    due_round: int
+    bits: float
+    attempt: int
+
+
+class _FaultState:
+    """Per-case fault bookkeeping carried across rounds by every
+    driver (sequential, async and the reference loop)."""
+
+    __slots__ = ("retries", "attempts")
+
+    def __init__(self):
+        # in-flight retransmissions: client -> _RetryEntry
+        self.retries: Dict[int, _RetryEntry] = {}
+        # consecutive failed attempts per client (cleared on a clean
+        # arrival or on giving up)
+        self.attempts: Dict[int, int] = {}
+
+
+_MIN_FAULT_BITS = 2.0   # dropout truncation floor (avoid 0-bit uploads)
+
+
 def _round_setup(case: SweepCase, schedule: TimelineSchedule, r: int,
-                 carry: Dict[int, float]):
-    """(clients_r, no_dl_ids, rem_start) for round ``r`` of one case.
+                 carry: Dict[int, float],
+                 retries: Optional[Dict[int, _RetryEntry]] = None):
+    """(clients_r, no_dl_ids, rem_start, drops) for round ``r``.
 
     Fresh members take the round's upload size; carriers (clients with
     deferred bits) re-enter with their remaining bits, zero compute time
-    and no model download, regardless of the membership mask.
+    and no model download, regardless of the membership mask. Retry
+    entries behave the same two ways: one *due* (``due_round <= r``)
+    re-enters exactly like a carrier; one still backing off suppresses
+    the client's fresh membership entry — the invariant that a
+    membership mask can never revive a client inside an in-flight
+    deferred/retry upload holds by construction (regression-tested).
+
+    ``drops`` maps this round's dropout victims (``schedule.faults``)
+    to their *full* pending bits; their simulated upload is truncated
+    at the death point (``_MIN_FAULT_BITS`` floor), and the full
+    payload is what the retry will re-send.
     """
     clients = case.workload.clients
     mask = (schedule.membership[r] if schedule.membership is not None
             else np.ones(len(clients), bool))
+    retries = retries or {}
     out = []
     rem_start: Dict[int, float] = {}
+    no_dl = set(carry)
     for j, c in enumerate(clients):
-        if c.client_id in carry:
-            bits = carry[c.client_id]
+        cid = c.client_id
+        if cid in carry:
+            if cid in retries:       # pragma: no cover - internal guard
+                raise RuntimeError(
+                    f"client {cid} is both a deferred carrier and an "
+                    "in-flight retry at round "
+                    f"{r}: fault bookkeeping desynced"
+                )
+            bits = carry[cid]
             out.append(replace(c, t_ud=0.0, t_dl=0.0, m_ud_bits=bits))
-            rem_start[c.client_id] = bits
+            rem_start[cid] = bits
+        elif cid in retries:
+            ent = retries[cid]
+            if ent.due_round > r:
+                continue             # backing off: mask never revives
+            retries.pop(cid)         # in flight again from this round
+            out.append(replace(c, t_ud=0.0, t_dl=0.0,
+                               m_ud_bits=ent.bits))
+            rem_start[cid] = ent.bits
+            no_dl.add(cid)
         elif mask[j]:
             bits = schedule.round_m_ud(r, j, c.m_ud_bits)
             out.append(replace(c, m_ud_bits=bits))
-            rem_start[c.client_id] = bits
-    return out, frozenset(carry), rem_start
+            rem_start[cid] = bits
+    drops: Dict[int, float] = {}
+    faults = schedule.active_faults
+    if faults is not None and faults.dropout_rate > 0.0 and rem_start:
+        frac = faults.dropouts(r, sorted(rem_start), case.seed)
+        if frac:
+            for i, c in enumerate(out):
+                f = frac.get(c.client_id)
+                if f is None:
+                    continue
+                full = c.m_ud_bits
+                cut = min(max(f * full, _MIN_FAULT_BITS), full)
+                out[i] = replace(c, m_ud_bits=cut)
+                rem_start[c.client_id] = cut
+                drops[c.client_id] = full
+    return out, frozenset(no_dl), rem_start, drops
 
 
 def _round_view(r: int, t_start: float, result: Optional[RoundResult],
@@ -340,18 +496,115 @@ def _observe_round(collector, case, rnd: TimelineRound,
     )
 
 
+def _round_faulted(schedule: TimelineSchedule, case, r: int,
+                   rem_start: Dict[int, float],
+                   drops: Dict[int, float]) -> frozenset:
+    """The round's faulted clients: dropout victims plus the loss draw.
+
+    The loss draw covers every *pending* client (not just the arrived
+    ones), so the set is a pure function of ``(round, pending)`` —
+    identical for the quorum rerun, the async probe pass and the
+    reference oracle.
+    """
+    faults = schedule.active_faults
+    lost = (faults.losses(r, sorted(rem_start), case.seed)
+            if faults is not None and faults.loss_rate > 0.0 and rem_start
+            else frozenset())
+    return frozenset(drops) | lost
+
+
+def _effective_arrived(result: RoundResult, rem_start: Dict[int, float],
+                       faulted: frozenset) -> List[int]:
+    """Uploads that completed AND were not cancelled by a fault — the
+    arrivals the quorum counts (shared by engine drivers and oracle)."""
+    remaining = result.ul_remaining or {}
+    return [cid for cid in rem_start
+            if cid not in remaining and cid not in faulted]
+
+
+def _apply_round_faults(schedule: TimelineSchedule, case, r: int,
+                        rnd: TimelineRound, rem_start: Dict[int, float],
+                        carry: Dict[int, float], drops: Dict[int, float],
+                        fstate: _FaultState,
+                        collector=None) -> Dict[int, float]:
+    """Cancel faulted arrivals, book retry-with-backoff entries and
+    return the updated carry (shared by the sequential/async drivers
+    and the reference loop — both backends fold faults identically).
+
+    Dropout victims are failed this round regardless of deadline
+    policy: their served bits were wasted wire time (``rnd.failed``),
+    and the retry re-sends the *full* payload. Loss victims completed
+    the wire transfer but the payload is discarded (``rnd.lost``); the
+    retry re-sends the failure round's pending bits (fragment
+    retransmission is not modelled). Either way the client backs off
+    ``retry.delay_rounds(attempt)`` rounds (``rnd.retry_at``) or — past
+    ``max_retries`` attempts — abandons the update (``rnd.gave_up``)
+    and re-enters fresh through membership.
+    """
+    faults = schedule.active_faults
+    if faults is None:
+        return carry
+    retry = schedule.retry_policy
+
+    def book(cid: int, bits: float):
+        attempt = fstate.attempts.get(cid, 0) + 1
+        if attempt > retry.max_retries:
+            fstate.attempts.pop(cid, None)
+            rnd.gave_up.append(cid)
+            if collector is not None:
+                collector.event("fault.gave_up", round=r, client=cid,
+                                attempts=attempt - 1, seed=case.seed)
+            return
+        fstate.attempts[cid] = attempt
+        due = r + retry.delay_rounds(attempt)
+        fstate.retries[cid] = _RetryEntry(due, bits, attempt)
+        rnd.retry_at[cid] = due
+
+    for cid in sorted(drops):
+        rnd.failed[cid] = rnd.ul_bits.get(cid, 0.0)
+        if cid in rnd.arrived:
+            rnd.arrived.remove(cid)
+        rnd.staleness.pop(cid, None)
+        carry.pop(cid, None)
+        rnd.deferred.pop(cid, None)
+        rnd.dropped.pop(cid, None)
+        rnd.partial.pop(cid, None)
+        book(cid, drops[cid])
+        if collector is not None:
+            collector.event("fault.dropout", round=r, client=cid,
+                            wasted_bits=rnd.failed[cid], seed=case.seed)
+    if faults.loss_rate > 0.0 and rnd.arrived:
+        lost_draw = faults.losses(r, sorted(rem_start), case.seed)
+        for cid in [c for c in rnd.arrived if c in lost_draw]:
+            rnd.arrived.remove(cid)
+            rnd.staleness.pop(cid, None)
+            rnd.lost.append(cid)
+            book(cid, rem_start[cid])
+            if collector is not None:
+                collector.event("fault.loss", round=r, client=cid,
+                                bits=rem_start[cid], seed=case.seed)
+    for cid in rnd.arrived:          # a clean arrival resets backoff
+        fstate.attempts.pop(cid, None)
+    return carry
+
+
 def _kth_completion(result: RoundResult, rem_start: Dict[int, float],
-                    buffer_k: int) -> float:
+                    buffer_k: int,
+                    exclude: frozenset = frozenset()) -> Optional[float]:
     """The async cutoff: completion time of the k-th pending upload.
 
     Zero-bit uploads complete at the round start (their ``ul_done`` is
     NaN — nothing was ever queued). Fewer than k pending clients fall
-    back to the last completion (a plain full round).
-    """
+    back to the last completion (a plain full round). ``exclude``
+    (the round's faulted clients) never counts toward the buffer — the
+    aggregator waits for the k-th *valid* update; if nothing valid is
+    pending the round runs free (``None``: no deadline)."""
     times = sorted(
         0.0 if np.isnan(result.ul_done[cid]) else float(result.ul_done[cid])
-        for cid in rem_start
+        for cid in rem_start if cid not in exclude
     )
+    if not times:
+        return None
     return times[min(buffer_k, len(times)) - 1]
 
 
@@ -379,23 +632,33 @@ def _validate(cases: Sequence[SweepCase], schedule: TimelineSchedule):
 # ---------------------------------------------------------------------------
 
 
-def _build_rows(cases, schedule, r, carries):
-    """Per-round SweepCase rows + alignment metadata for a batch."""
+def _case_n_pons(case) -> int:
+    return case.topology.n_pons if case.topology is not None else 1
+
+
+def _build_rows(cases, schedule, r, carries, fstates=None):
+    """Per-round SweepCase rows + alignment metadata for a batch.
+
+    Metadata rows are ``(b, row_index_or_None, rem_start, drops)``;
+    ``fstates`` (per-case ``_FaultState``) supplies in-flight retries
+    whose due entries re-enter this round.
+    """
     row_cases = []
     row_meta = []
     for b, case in enumerate(cases):
-        clients_r, no_dl, rem_start = _round_setup(
-            case, schedule, r, carries[b]
+        clients_r, no_dl, rem_start, drops = _round_setup(
+            case, schedule, r, carries[b],
+            fstates[b].retries if fstates is not None else None,
         )
         if not clients_r:
-            row_meta.append((b, None, rem_start))
+            row_meta.append((b, None, rem_start, drops))
             continue
         wl = FLRoundWorkload(
             clients=clients_r,
             model_bits=case.workload.model_bits,
             t_aggregate=case.workload.t_aggregate,
         )
-        row_meta.append((b, len(row_cases), rem_start))
+        row_meta.append((b, len(row_cases), rem_start, drops))
         row_cases.append(SweepCase(
             workload=wl, load=case.load, policy=case.policy,
             seed=case.seed, stream_round=r, no_dl_ids=no_dl,
@@ -404,42 +667,133 @@ def _build_rows(cases, schedule, r, carries):
     return row_cases, row_meta
 
 
+def _round_outages(cases, schedule, r, row_meta):
+    """Per-engine-row outage windows for round ``r`` (aligned with the
+    round's row_cases), or None when outage injection is inactive."""
+    faults = schedule.active_faults
+    if faults is None or faults.outage_rate <= 0.0:
+        return None
+    n_rows = sum(1 for _, ridx, _, _ in row_meta if ridx is not None)
+    outages: List[Optional[np.ndarray]] = [None] * n_rows
+    for b, ridx, _, _ in row_meta:
+        if ridx is not None:
+            outages[ridx] = faults.outage_windows(
+                r, _case_n_pons(cases[b]), cases[b].seed
+            )
+    return outages
+
+
 def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
                     deadline_fn, collector=None):
     """The shared round-by-round driver: build rows, resolve each
-    round's deadline(s) via ``deadline_fn(r, row_cases, row_meta)``
-    (a scalar, or a per-row list), advance the engine, fold results
-    and carry deferred state/entry rounds forward."""
+    round's deadline(s) via ``deadline_fn(r, row_cases, row_meta,
+    outages)`` (a scalar, or a per-row list), advance the engine, apply
+    the round's faults/quorum and carry deferred + retry state forward.
+
+    Quorum reruns (doubled deadline) re-advance only the unmet rows;
+    like the async probe pass they stay uninstrumented at the engine
+    level — only the first pass feeds phase metrics — but each
+    extension emits a ``quorum.extend`` event.
+    """
+    import math
+
     from repro.obs.trace import maybe_span
 
     B = len(cases)
     carries: List[Dict[int, float]] = [{} for _ in range(B)]
     entries: List[Dict[int, int]] = [{} for _ in range(B)]
+    fstates = [_FaultState() for _ in range(B)]
     t_now = np.zeros(B)
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
                           rounds=[]) for c in cases]
+    quorum = schedule.quorum_frac
     for r in range(schedule.n_rounds):
-        row_cases, row_meta = _build_rows(cases, schedule, r, carries)
-        for b, _, rem_start in row_meta:
+        row_cases, row_meta = _build_rows(
+            cases, schedule, r, carries, fstates
+        )
+        for b, _, rem_start, _ in row_meta:
             for cid in rem_start:
                 entries[b].setdefault(cid, r)
-        deadlines = deadline_fn(r, row_cases, row_meta)
+        outages = _round_outages(cases, schedule, r, row_meta)
+        deadlines = deadline_fn(r, row_cases, row_meta, outages)
         with maybe_span(collector, f"timeline:round[{r}]",
                         rows=len(row_cases)):
             results = simulate_round_sweep(
                 cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
-                ul_deadline_s=deadlines, collector=collector,
+                ul_deadline_s=deadlines, ul_outage_s=outages,
+                collector=collector,
             ) if row_cases else []
+        ext_counts: Dict[int, int] = {}
+        met: Dict[int, bool] = {}
+        if quorum is not None and row_cases:
+            dls = (list(deadlines)
+                   if isinstance(deadlines, (list, tuple, np.ndarray))
+                   else [deadlines] * len(row_cases))
+
+            def _unmet():
+                redo = []
+                for b, ridx, rem_start, drops in row_meta:
+                    if ridx is None or dls[ridx] is None:
+                        continue
+                    faulted = _round_faulted(
+                        schedule, cases[b], r, rem_start, drops
+                    )
+                    got = len(_effective_arrived(
+                        results[ridx], rem_start, faulted
+                    ))
+                    need = max(1, math.ceil(quorum * len(rem_start)))
+                    met[ridx] = got >= need
+                    if got < need:
+                        redo.append((b, ridx))
+                return redo
+
+            for _ in range(schedule.quorum_max_extends):
+                redo = _unmet()
+                if not redo:
+                    break
+                for b, ridx in redo:
+                    dls[ridx] = float(dls[ridx]) * 2.0
+                    ext_counts[ridx] = ext_counts.get(ridx, 0) + 1
+                    if collector is not None:
+                        collector.event(
+                            "quorum.extend", round=r,
+                            seed=cases[b].seed,
+                            deadline_s=dls[ridx],
+                            extension=ext_counts[ridx],
+                        )
+                sub_idx = [ridx for _, ridx in redo]
+                sub = simulate_round_sweep(
+                    cfg, [row_cases[i] for i in sub_idx],
+                    t_round_hint=t_round_hint, max_t=max_t,
+                    ul_deadline_s=[dls[i] for i in sub_idx],
+                    ul_outage_s=(None if outages is None else
+                                 [outages[i] for i in sub_idx]),
+                )
+                for j, ridx in enumerate(sub_idx):
+                    results[ridx] = sub[j]
+            else:
+                _unmet()        # final verdicts after the last extend
+            deadlines = dls
         per_row_dl = isinstance(deadlines, (list, tuple, np.ndarray))
-        for b, ridx, rem_start in row_meta:
+        for b, ridx, rem_start, drops in row_meta:
             res = results[ridx] if ridx is not None else None
             rnd, carry = _round_view(
                 r, float(t_now[b]), res, rem_start,
                 cases[b].workload.t_aggregate, policy, entries[b],
             )
+            if ridx is not None and ridx in met:
+                rnd.quorum_met = met[ridx]
+                rnd.deadline_extensions = ext_counts.get(ridx, 0)
+            carry = _apply_round_faults(
+                schedule, cases[b], r, rnd, rem_start, carry, drops,
+                fstates[b], collector,
+            )
             out[b].rounds.append(rnd)
             carries[b] = carry
-            entries[b] = {cid: entries[b][cid] for cid in carry}
+            entries[b] = {
+                cid: ent for cid, ent in entries[b].items()
+                if cid in carry or cid in fstates[b].retries
+            }
             t_now[b] += rnd.sync_time
             if collector is not None:
                 dl = (deadlines[ridx]
@@ -457,7 +811,7 @@ def _sequential(cfg, cases, schedule, t_round_hint, max_t,
     return _advance_rounds(
         cfg, cases, schedule, t_round_hint, max_t,
         schedule.deadline_policy,
-        lambda r, row_cases, row_meta: schedule.deadline(r),
+        lambda r, row_cases, row_meta, outages: schedule.deadline(r),
         collector=collector,
     )
 
@@ -473,18 +827,21 @@ def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None):
     """
     k = schedule.buffer_k
 
-    def deadline_fn(r, row_cases, row_meta):
+    def deadline_fn(r, row_cases, row_meta, outages):
         # NOTE: the free-running probe pass stays uninstrumented — only
         # the deadline pass (the round that actually happens) feeds the
         # collector, so nothing is double-counted.
         free = simulate_round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
+            ul_outage_s=outages,
         )
         deadlines: List[Optional[float]] = [None] * len(row_cases)
-        for _, ridx, rem_start in row_meta:
+        for b, ridx, rem_start, drops in row_meta:
             if ridx is not None:
                 deadlines[ridx] = _kth_completion(
-                    free[ridx], rem_start, k
+                    free[ridx], rem_start, k,
+                    _round_faulted(schedule, cases[b], r, rem_start,
+                                   drops),
                 )
         return deadlines
 
@@ -500,12 +857,17 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
     independent given their start times — no deadline, or drop/partial
     policies whose stragglers never carry state forward; each row then
     runs under its own round's deadline)."""
+    faults = schedule.active_faults
+    has_outage = faults is not None and faults.outage_rate > 0.0
     rows = []
     row_deadlines: List[Optional[float]] = []
+    row_outages: List[Optional[np.ndarray]] = []
     meta = []            # (b, r, rem_start, row_index or None)
     for b, case in enumerate(cases):
         for r in range(schedule.n_rounds):
-            clients_r, _, rem_start = _round_setup(case, schedule, r, {})
+            clients_r, _, rem_start, _ = _round_setup(
+                case, schedule, r, {}
+            )
             if not clients_r:
                 meta.append((b, r, rem_start, None))
                 continue
@@ -521,6 +883,14 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
                 topology=case.topology,
             ))
             row_deadlines.append(schedule.deadline(r))
+            if has_outage:
+                # outage injection never couples rounds (dark cycles
+                # just delay the round's own uploads), so it folds as
+                # one more per-row axis: each row carries its round's
+                # counter-keyed window
+                row_outages.append(faults.outage_windows(
+                    r, _case_n_pons(case), case.seed
+                ))
     from repro.obs.trace import maybe_span
 
     has_deadline = schedule.deadline_s is not None
@@ -529,6 +899,7 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
         results = simulate_round_sweep(
             cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
             ul_deadline_s=row_deadlines if has_deadline else None,
+            ul_outage_s=row_outages if has_outage else None,
             collector=collector,
         ) if rows else []
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
@@ -585,9 +956,11 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     if mode == "folded":
         if schedule.couples_rounds:
             raise ValueError(
-                "deadline deferral couples consecutive rounds; folded "
-                "mode requires a schedule without deferred state "
-                "(no deadline, or drop/partial policies)"
+                "schedule couples consecutive rounds (deadline "
+                "deferral, dropout/loss retries or quorum extension); "
+                "folded mode requires independent rounds — no "
+                "deadline or drop/partial policies, and at most "
+                "outage-only fault injection"
             )
         return _folded(cfg, cases, schedule, t_round_hint, max_t,
                        collector=collector)
@@ -641,18 +1014,22 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
     from repro.net.sim import simulate_round
     from repro.net.traffic import CounterStream
 
+    import math
+
     cases = _validate(cases, schedule)
     policy = schedule.deadline_policy
+    quorum = schedule.quorum_frac
     out = []
     for case in cases:
         carry: Dict[int, float] = {}
         entry: Dict[int, int] = {}
+        fstate = _FaultState()
         t_now = 0.0
         res = TimelineResult(policy=case.policy, load=case.load,
                              seed=case.seed, rounds=[])
         for r in range(schedule.n_rounds):
-            clients_r, no_dl, rem_start = _round_setup(
-                case, schedule, r, carry
+            clients_r, no_dl, rem_start, drops = _round_setup(
+                case, schedule, r, carry, fstate.retries
             )
             for cid in rem_start:
                 entry.setdefault(cid, r)
@@ -669,6 +1046,11 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
                 model_bits=case.workload.model_bits,
                 t_aggregate=case.workload.t_aggregate,
             )
+            faults = schedule.active_faults
+            outage = (faults.outage_windows(r, _case_n_pons(case),
+                                            case.seed)
+                      if faults is not None and faults.outage_rate > 0.0
+                      else None)
 
             def run_ref(deadline):
                 """One reference round under ``deadline`` — fresh
@@ -682,6 +1064,7 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
                         seed=case.seed, t_round_hint=t_round_hint,
                         max_t=max_t, ul_deadline_s=deadline,
                         no_dl_ids=no_dl, stream_round=r,
+                        ul_outage_s=outage,
                     )
                 row = SweepCase(workload=wl, load=case.load,
                                 policy=case.policy, seed=case.seed)
@@ -704,20 +1087,53 @@ def simulate_timeline_reference(cfg, cases: Sequence[SweepCase],
                                  for i in range(cfg.n_onus)],
                     ul_deadline_s=deadline,
                     no_dl_ids=no_dl,
+                    ul_outage_s=(None if outage is None else
+                                 (float(outage[0, 0]),
+                                  float(outage[0, 1]))),
                 )
 
+            quorum_met: Optional[bool] = None
+            extensions = 0
             if schedule.asynchronous:
                 free = run_ref(None)
+                faulted = _round_faulted(schedule, case, r, rem_start,
+                                         drops)
                 result = run_ref(
-                    _kth_completion(free, rem_start, schedule.buffer_k)
+                    _kth_completion(free, rem_start, schedule.buffer_k,
+                                    faulted)
                 )
+            elif quorum is not None:
+                # same extend-until-met loop as the engine driver:
+                # identical counter streams make each rerun a superset
+                # of the previous pass
+                faulted = _round_faulted(schedule, case, r, rem_start,
+                                         drops)
+                need = max(1, math.ceil(quorum * len(rem_start)))
+                dl = schedule.deadline(r)
+                result = run_ref(dl)
+                while True:
+                    got = len(_effective_arrived(result, rem_start,
+                                                 faulted))
+                    quorum_met = got >= need
+                    if (quorum_met
+                            or extensions >= schedule.quorum_max_extends):
+                        break
+                    dl = float(dl) * 2.0
+                    extensions += 1
+                    result = run_ref(dl)
             else:
                 result = run_ref(schedule.deadline(r))
             rnd, carry = _round_view(
                 r, t_now, result, rem_start,
                 case.workload.t_aggregate, policy, entry,
             )
-            entry = {cid: entry[cid] for cid in carry}
+            rnd.quorum_met = quorum_met
+            rnd.deadline_extensions = extensions
+            carry = _apply_round_faults(
+                schedule, case, r, rnd, rem_start, carry, drops, fstate,
+            )
+            entry = {cid: ent for cid, ent in entry.items()
+                     if cid in carry or cid in fstate.retries}
             res.rounds.append(rnd)
             t_now += rnd.sync_time
         out.append(res)
