@@ -71,19 +71,28 @@ def _payload_metrics(payload: dict) -> Dict[str, float]:
     bench = payload.get("benchmark")
     out: Dict[str, float] = {}
     if bench == "fig2b_sweep_reference_vs_vectorized":
-        for tp in payload.get("engine_throughput", []):
-            out[f"net_engine_round_n{tp['n_onus']}.rounds_per_sec"] = (
-                tp["rounds_per_sec"]
-            )
+        for key, suffix in (("engine_throughput", ""),
+                            ("engine_throughput_jit", "_jit")):
+            for tp in payload.get(key, []):
+                out[f"net_engine_round_n{tp['n_onus']}{suffix}"
+                    f".rounds_per_sec"] = tp["rounds_per_sec"]
     elif bench == "fig3_multiround_timeline_vs_per_round":
         # the sweep speedup depends on the measured round count: key it
         # by config so fast-tier (R=6) and --full (R=24) never collide
         out[f"timeline_fig3_sweep_r{payload['n_rounds']}.speedup"] = (
             payload["speedup"]
         )
-        for tp in payload.get("throughput", []):
-            out[f"timeline_rounds_n{tp['n_onus']}.rounds_per_sec"] = (
-                tp["rounds_per_sec"]
+        for key, suffix in (("throughput", ""), ("throughput_jit", "_jit"),
+                            ("throughput_fl", "_fl"),
+                            ("throughput_fl_jit", "_fl_jit")):
+            for tp in payload.get(key, []):
+                out[f"timeline_rounds_n{tp['n_onus']}{suffix}"
+                    f".rounds_per_sec"] = tp["rounds_per_sec"]
+        stacked = payload.get("stacked")
+        if stacked and stacked.get("completed"):
+            out[f"timeline_stacked_n{stacked['n_onus_total']}"
+                f"_p{stacked['n_pons']}.rounds_per_sec"] = (
+                stacked["rounds_per_sec"]
             )
     elif bench == "async_timeline_policies":
         # the net part runs R=6 in both default and --full modes, so

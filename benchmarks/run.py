@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 ``--tier fast`` runs only the cheap tier (module attribute
 ``TIER == "fast"``; training/roofline modules are the slow tier);
 ``--json out.json`` additionally writes the rows (plus environment
-metadata) as JSON — the artifact CI uploads.
+metadata) as JSON — the artifact CI uploads; ``--profile`` stamps a
+per-stage (per-module) wall-time breakdown into the payload ``meta``
+block, which ``compare.py`` ignores (provenance, never a gated metric).
 """
 from __future__ import annotations
 
@@ -64,11 +66,15 @@ def main(argv=None) -> None:
                     default="all", help="which benchmark tier to run")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + metadata as JSON")
+    ap.add_argument("--profile", action="store_true",
+                    help="stamp per-stage wall-time breakdown into the "
+                         "JSON meta block (compare.py-ignored)")
     args = ap.parse_args(argv)
 
     modules = collect_modules(args.tier)
     print("name,us_per_call,derived")
     rows = []
+    profile: dict = {}
     failures = 0
     for name, mod in modules:
         t0 = time.time()
@@ -85,20 +91,37 @@ def main(argv=None) -> None:
             rows.append({"name": name, "us_per_call": 0.0, "module": name,
                          "derived": f"ERROR: {type(e).__name__}: {e}"})
         finally:
+            wall = time.time() - t0
+            profile[name] = wall
             rows.append({
                 "name": f"{name}__module_wall",
-                "us_per_call": (time.time() - t0) * 1e6,
+                "us_per_call": wall * 1e6,
                 "derived": "module wall-clock",
                 "module": name,
             })
+    if args.profile:
+        total = sum(profile.values()) or 1.0
+        print("--- profile (wall per stage) ---", file=sys.stderr)
+        for name, wall in sorted(profile.items(), key=lambda kv: -kv[1]):
+            print(f"{name:<24s} {wall:8.2f}s  {wall / total:6.1%}",
+                  file=sys.stderr)
     if args.json:
         from benchmarks._env import env_metadata
 
+        meta = env_metadata()
+        if args.profile:
+            # provenance only: compare.py drops the whole meta block, so
+            # the breakdown can never become a gated (noisy) metric
+            meta["profile"] = {
+                "total_wall_s": sum(profile.values()),
+                "stage_wall_s": {k: round(v, 4)
+                                 for k, v in profile.items()},
+            }
         payload = {
             "tier": args.tier,
             "python": platform.python_version(),
             "platform": platform.platform(),
-            "meta": env_metadata(),
+            "meta": meta,
             "rows": rows,
         }
         with open(args.json, "w") as f:

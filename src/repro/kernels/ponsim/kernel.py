@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the waterfill grant step.
+
+The grant step of the cycle engine serves queues oldest-first until the
+cycle capacity runs out (``repro.net.engine._waterfill``).  The numpy /
+XLA oracles express it as a stable argsort + prefix sum; on TPU a sort
+per cycle is the wrong shape (tiny rows, huge batch), so this kernel
+uses the O(N^2) *rank-sum* form instead:
+
+    S_i   = sum_j backlog_j * [key_j < key_i  or  (key_j == key_i and j < i)]
+    room  = cap - S_i
+    g_i   = min(backlog_i, room)   if room > eps else 0
+
+``S_i`` is exactly the sorted-prefix "water already poured" for queue
+``i`` under a *stable* oldest-first order, so the grants match the sort
+formulation (up to f32 accumulation order).  The comparison matrix is a
+natural MXU/VPU shape: a (BI, BJ) mask contracted against a BJ backlog
+tile, streamed over j-tiles with a fori accumulator — no sort, no
+scatter.
+
+Full drains must stay *exact* (the serve step detects them by float
+equality), so callers recover them from ``g == backlog`` in f32 — when
+``room >= backlog`` the kernel emits bitwise ``backlog`` — and restore
+the f64 backlog for those lanes (``ops._waterfill_device``).
+
+The kernel is only dispatched on TPU backends; the CPU container
+exercises it through ``interpret=True`` (tests/test_ponsim_jit.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CAP_EPS = 1e-9   # repro.net.engine.CAP_EPS
+
+BLOCK_I = 128    # queues granted per grid cell (lane width)
+BLOCK_J = 128    # contribution tile streamed per fori step
+
+
+def _waterfill_kernel(b_ref, key_ref, cap_ref, brow_ref, krow_ref, g_ref,
+                      *, n_cols: int):
+    i = pl.program_id(1)
+    bi = b_ref[0, :]                              # (BI,) this row's tile
+    ki = key_ref[0, :]
+    idx_i = i * BLOCK_I + jax.lax.broadcasted_iota(
+        jnp.int32, (BLOCK_I,), 0)
+
+    def body(jc, acc):
+        sl = (pl.dslice(0, 1), pl.dslice(jc * BLOCK_J, BLOCK_J))
+        bj = pl.load(brow_ref, sl)[0]             # (BJ,) whole-row tile
+        kj = pl.load(krow_ref, sl)[0]
+        idx_j = jc * BLOCK_J + jax.lax.broadcasted_iota(
+            jnp.int32, (BLOCK_J,), 0)
+        earlier = (kj[None, :] < ki[:, None]) | (
+            (kj[None, :] == ki[:, None])
+            & (idx_j[None, :] < idx_i[:, None])
+        )
+        return acc + jnp.sum(
+            jnp.where(earlier, bj[None, :], jnp.float32(0.0)), axis=1)
+
+    n_tiles = n_cols // BLOCK_J
+    served = jax.lax.fori_loop(
+        0, n_tiles, body, jnp.zeros((BLOCK_I,), jnp.float32))
+    room = cap_ref[0] - served
+    g = jnp.where(room > jnp.float32(CAP_EPS),
+                  jnp.minimum(bi, room), jnp.float32(0.0))
+    g_ref[0, :] = g
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def waterfill_grants_pallas(backlog, key, cap, *, interpret: bool = False):
+    """Rank-sum waterfill grants, float32.
+
+    backlog: (R, N) f32, key: (R, N) f32 (lower = older; +inf = empty),
+    cap: (R,) f32.  N must be a multiple of 128 — pad with
+    ``backlog=0, key=+inf`` (a zero-backlog queue contributes nothing
+    and takes nothing).  Returns (R, N) f32 grants; full drains are
+    bitwise ``backlog``.
+    """
+    r, n = backlog.shape
+    if n % BLOCK_I:
+        raise ValueError(f"n_queues {n} not a multiple of {BLOCK_I}")
+    grid = (r, n // BLOCK_I)
+    return pl.pallas_call(
+        functools.partial(_waterfill_kernel, n_cols=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_I), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK_I), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_I), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(backlog, key, cap, backlog, key)

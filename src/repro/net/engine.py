@@ -32,6 +32,8 @@ its default backend.
 """
 from __future__ import annotations
 
+import functools
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -190,6 +192,38 @@ class _Layout:
         for name in ("part", "t_ud", "m_ud", "dist", "list_pos"):
             setattr(sub, name, getattr(self, name)[sel])
         return sub
+
+
+_LAYOUT_CACHE: "OrderedDict[tuple, _Layout]" = OrderedDict()
+_LAYOUT_CACHE_MAX = 16
+
+
+def _layout_for(cases: Sequence[SweepCase], n_onus: int,
+                n_pons: int = 1) -> _Layout:
+    """Memoized ``_Layout`` construction.
+
+    The layout depends only on the client tuples (ids, t_ud, m_ud,
+    distance — ``ClientProfile`` is frozen/hashable) and the topology
+    shape, and is never mutated after ``__init__`` — every phase of
+    every round of a timeline with stable membership rebuilds the exact
+    same python bucket/colmap loops.  A small LRU keyed by the client
+    tuples removes that rebuild; elastic-membership timelines simply
+    rotate through the LRU.
+    """
+    try:
+        key = (int(n_onus), int(n_pons),
+               tuple(tuple(case.workload.clients) for case in cases))
+    except TypeError:             # unhashable client type: build fresh
+        return _Layout(cases, n_onus, n_pons)
+    lay = _LAYOUT_CACHE.get(key)
+    if lay is None:
+        lay = _Layout(cases, n_onus, n_pons)
+        _LAYOUT_CACHE[key] = lay
+        while len(_LAYOUT_CACHE) > _LAYOUT_CACHE_MAX:
+            _LAYOUT_CACHE.popitem(last=False)
+    else:
+        _LAYOUT_CACHE.move_to_end(key)
+    return lay
 
 
 # ---------------------------------------------------------------------------
@@ -825,17 +859,34 @@ def _case_bg_rate(case: SweepCase, cfg, t_round_hint: float) -> float:
     )
 
 
-def _bs_slice(profiles: List[ClientProfile], capacity_bps: float):
-    """Per-segment slice spec + slot arrays (empty segments allowed —
-    a PON row of a multi-PON case may hold no clients)."""
+@functools.lru_cache(maxsize=512)
+def _bs_slice_cached(profiles: tuple, capacity_bps: float):
     if not profiles:
         return None, slots_to_arrays([])
     spec = compute_slice(
-        profiles, t_current=0.0, t_round=0.0,
+        list(profiles), t_current=0.0, t_round=0.0,
         capacity_bps=capacity_bps, h=1,
     )
-    slots = schedule_slots(profiles, spec, round_start=0.0)
+    slots = schedule_slots(list(profiles), spec, round_start=0.0)
     return spec, slots_to_arrays(slots)
+
+
+def _bs_slice(profiles: List[ClientProfile], capacity_bps: float):
+    """Per-segment slice spec + slot arrays (empty segments allowed —
+    a PON row of a multi-PON case may hold no clients).
+
+    Memoized on the (frozen, hashable) profile tuple: the bs downstream
+    is analytic, so a folded/sequential timeline re-derives the *same*
+    slice spec and slot schedule every round — the profile shows the
+    repeated ``compute_slice``/``schedule_slots``/``slots_to_arrays``
+    work on every phase entry.  Callers treat the returned arrays as
+    immutable (``_stack_slots`` only reads them).
+    """
+    try:
+        return _bs_slice_cached(tuple(profiles), float(capacity_bps))
+    except TypeError:             # unhashable profile type: uncached
+        return _bs_slice_cached.__wrapped__(
+            tuple(profiles), float(capacity_bps))
 
 
 def _stack_slots(per_row, n_onus: int):
@@ -881,6 +932,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                          ul_deadline_s=None,
                          ul_outage_s=None,
                          collector=None,
+                         backend: Optional[str] = None,
                          ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
 
@@ -921,11 +973,35 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     cycle metrics inside ``_run_phase`` plus per-case upload-completion
     times keyed by (policy, load); ``collector=None`` (the default) is
     bitwise identical to an uninstrumented run.
+
+    ``backend`` selects the phase engine: ``None``/``"numpy"`` is the
+    host cycle loop (the default, bitwise-pinned); ``"jit"`` compiles
+    each phase to one jax device program with the traffic sampler fused
+    in (``repro.kernels.ponsim``) — parity with numpy at rtol 1e-6,
+    with a transparent numpy re-run for phases whose background state
+    outgrows the device ring (see ``ops.run_phase_device``).  The jit
+    backend rejects injected arrival matrices and ``collector``
+    instrumentation.
     """
     from repro.net.sim import RoundResult  # lazy: sim imports us lazily
     from repro.obs.trace import maybe_span
 
     cases = list(cases)
+    if backend not in (None, "numpy", "jit"):
+        raise ValueError(f"unknown engine backend {backend!r}")
+    use_jit = backend == "jit"
+    if use_jit:
+        if collector is not None:
+            raise ValueError(
+                "backend='jit' does not support collector "
+                "instrumentation; use the numpy backend"
+            )
+        if any(case.dl_arrivals is not None
+               or case.ul_arrivals is not None for case in cases):
+            raise ValueError(
+                "backend='jit' does not support injected arrival "
+                "matrices; use the numpy backend"
+            )
     topo = _sweep_topology(cases)
     P = topo.n_pons
     n_local = cfg.n_onus
@@ -941,7 +1017,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                     "bs policy requires client_id < n_onus * n_pons; "
                     f"got {bad}"
                 )
-    lay = _Layout(cases, n_local, P)
+    lay = _layout_for(cases, n_local, P)
     B = len(cases)
     R = B * P
     row_case = np.repeat(np.arange(B), P)
@@ -1029,6 +1105,46 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 ))
         return _Stream(entries, n_local, 1.0 / cfg.bg_burst_packets)
 
+    def stream_params(sel, phase):
+        """Raw (keys, lams) of ``providers(sel, phase)``'s sampled
+        entries — the jit backend fuses the sampler on-device instead
+        of going through a host ``_Stream``."""
+        from repro.kernels.traffic.ops import make_stream_key
+
+        ks = np.empty((len(sel), 2), np.uint32)
+        ls = np.empty((len(sel),), np.float32)
+        for i, r in enumerate(sel):
+            b, p = int(row_case[r]), int(row_pon[r])
+            case = cases[b]
+            ks[i] = make_stream_key(case.seed, 0 if phase == "dl" else 1,
+                                    case.stream_round, p)
+            ls[i] = burst_lambda(per_onu_rate[b, p], cfg.cycle_time_s,
+                                 PACKET_BITS, cfg.bg_burst_packets)
+        return ks, ls
+
+    def run_phase(sub, rem0, ready, sel, phase, mode, **kw):
+        """One phase on the selected backend; the jit path falls back
+        to numpy when the device program reports an inexact bg walk."""
+        if use_jit:
+            from repro.kernels.ponsim.ops import run_phase_device
+
+            keys_ = lams_ = None
+            if mode == "fcfs":
+                keys_, lams_ = stream_params(sel, phase)
+            out = run_phase_device(
+                cfg, sub, rem0, ready, mode, keys=keys_, lams=lams_,
+                slot_arrays=kw.get("slot_arrays"), max_t=kw["max_t"],
+                fill_unfinished=kw.get("fill_unfinished", True),
+                cap_row=kw.get("cap_row"), cps_cap=kw.get("cps_cap"),
+                n_pons=kw.get("n_pons", 1),
+                deadline_row=kw.get("deadline_row"),
+                outage_row=kw.get("outage_row"),
+            )
+            if out is not None:
+                return out
+        stream = providers(sel, phase) if mode == "fcfs" else None
+        return _run_phase(cfg, sub, rem0, ready, stream, mode, **kw)
+
     # ---- downstream ------------------------------------------------------
     dl_done = np.full((R, lay.n_clients), np.nan)
     fcfs_rows = np.array(
@@ -1049,8 +1165,8 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         )
         ready0 = np.zeros_like(rem0)
         with maybe_span(collector, "phase:dl:fcfs", rows=len(fcfs_rows)):
-            dl_done[fcfs_rows], _ = _run_phase(
-                cfg, sub, rem0, ready0, providers(fcfs_rows, "dl"), "fcfs",
+            dl_done[fcfs_rows], _ = run_phase(
+                sub, rem0, ready0, fcfs_rows, "dl", "fcfs",
                 max_t=max_t, cap_row=cap_row[fcfs_rows], cps_cap=cps_cap,
                 n_pons=P, collector=collector, phase_label="dl:fcfs",
             )
@@ -1075,8 +1191,8 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[fcfs_rows], np.inf)
         with maybe_span(collector, "phase:ul:fcfs", rows=len(fcfs_rows)):
-            ul_done[fcfs_rows], ul_rem[fcfs_rows] = _run_phase(
-                cfg, sub, rem0, ready, providers(fcfs_rows, "ul"), "fcfs",
+            ul_done[fcfs_rows], ul_rem[fcfs_rows] = run_phase(
+                sub, rem0, ready, fcfs_rows, "ul", "fcfs",
                 max_t=ul_max_t, fill_unfinished=ul_deadline_s is None,
                 cap_row=cap_row[fcfs_rows], cps_cap=cps_cap, n_pons=P,
                 deadline_row=None if dl_row is None else dl_row[fcfs_rows],
@@ -1114,8 +1230,8 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[bs_rows], np.inf)
         with maybe_span(collector, "phase:ul:bs", rows=len(bs_rows)):
-            ul_done[bs_rows], ul_rem[bs_rows] = _run_phase(
-                cfg, sub, rem0, ready, None, "bs",
+            ul_done[bs_rows], ul_rem[bs_rows] = run_phase(
+                sub, rem0, ready, bs_rows, "ul", "bs",
                 slot_arrays=slot_arrays, max_t=ul_max_t,
                 fill_unfinished=ul_deadline_s is None,
                 cap_row=cap_row[bs_rows], cps_cap=cps_cap, n_pons=P,

@@ -281,8 +281,11 @@ def simulate_round(
     """Simulate one synchronisation round under ``policy`` in {fcfs, bs}.
 
     ``backend="vectorized"`` (default) runs the round on the batched
-    array engine (``repro.net.engine``); ``backend="reference"`` keeps
-    the original cycle-by-cycle simulator. Both implement the same
+    array engine (``repro.net.engine``); ``backend="jit"`` runs the
+    same engine with its device cycle loop
+    (``repro.kernels.ponsim``, numpy fallback on unsupported shapes);
+    ``backend="reference"`` keeps the original cycle-by-cycle
+    simulator. Both implement the same
     semantics (property-tested against each other). The reference
     backend keeps its own seeded numpy arrival draws unless
     ``_dl_sources``/``_ul_sources`` inject per-ONU sources (parity-test
@@ -304,9 +307,9 @@ def simulate_round(
     (``simulate_multi_pon_round``), which draws from the engine's
     counter streams directly and accepts no injected sources.
     """
-    if backend not in ("vectorized", "reference"):
+    if backend not in ("vectorized", "reference", "jit"):
         raise ValueError(f"unknown backend {backend!r}")
-    if (backend == "vectorized" and _dl_sources is None
+    if (backend in ("vectorized", "jit") and _dl_sources is None
             and _ul_sources is None):
         from repro.net.engine import SweepCase, simulate_round_sweep
 
@@ -319,7 +322,13 @@ def simulate_round(
             t_round_hint=t_round_hint,
             ul_deadline_s=ul_deadline_s,
             ul_outage_s=None if ul_outage_s is None else [ul_outage_s],
+            backend="jit" if backend == "jit" else None,
         )[0]
+    if backend == "jit":
+        raise ValueError(
+            "backend='jit' cannot replay injected per-ONU sources; "
+            "use backend='vectorized' or 'reference'"
+        )
     if topology is not None and not topology.trivial:
         from repro.net.multi_pon import simulate_multi_pon_round
 

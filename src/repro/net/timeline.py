@@ -684,7 +684,7 @@ def _round_outages(cases, schedule, r, row_meta):
 
 
 def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
-                    deadline_fn, collector=None):
+                    deadline_fn, collector=None, backend=None):
     """The shared round-by-round driver: build rows, resolve each
     round's deadline(s) via ``deadline_fn(r, row_cases, row_meta,
     outages)`` (a scalar, or a per-row list), advance the engine, apply
@@ -721,7 +721,7 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
             results = simulate_round_sweep(
                 cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
                 ul_deadline_s=deadlines, ul_outage_s=outages,
-                collector=collector,
+                collector=collector, backend=backend,
             ) if row_cases else []
         ext_counts: Dict[int, int] = {}
         met: Dict[int, bool] = {}
@@ -768,6 +768,7 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
                     ul_deadline_s=[dls[i] for i in sub_idx],
                     ul_outage_s=(None if outages is None else
                                  [outages[i] for i in sub_idx]),
+                    backend=backend,
                 )
                 for j, ridx in enumerate(sub_idx):
                     results[ridx] = sub[j]
@@ -804,7 +805,7 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
 
 
 def _sequential(cfg, cases, schedule, t_round_hint, max_t,
-                collector=None):
+                collector=None, backend=None):
     """Round-by-round engine advance, carrying deferred bits (the only
     legal order under defer deadlines; also the PR 2 per-round loop that
     the folded mode is benchmarked against)."""
@@ -812,11 +813,12 @@ def _sequential(cfg, cases, schedule, t_round_hint, max_t,
         cfg, cases, schedule, t_round_hint, max_t,
         schedule.deadline_policy,
         lambda r, row_cases, row_meta, outages: schedule.deadline(r),
-        collector=collector,
+        collector=collector, backend=backend,
     )
 
 
-def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None):
+def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None,
+           backend=None):
     """FedBuff-style async rounds: each round is cut at the completion
     time of the ``buffer_k``-th pending upload (two engine passes — a
     free-running pass locates ``t_k``, a deadline pass at ``t_k``
@@ -833,7 +835,7 @@ def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None):
         # collector, so nothing is double-counted.
         free = simulate_round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
-            ul_outage_s=outages,
+            ul_outage_s=outages, backend=backend,
         )
         deadlines: List[Optional[float]] = [None] * len(row_cases)
         for b, ridx, rem_start, drops in row_meta:
@@ -847,11 +849,12 @@ def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None):
 
     return _advance_rounds(
         cfg, cases, schedule, t_round_hint, max_t, "defer", deadline_fn,
-        collector=collector,
+        collector=collector, backend=backend,
     )
 
 
-def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
+def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None,
+            backend=None):
     """The whole timeline as ONE stacked simulation: the round axis is
     folded into the engine batch axis (legal whenever rounds are
     independent given their start times — no deadline, or drop/partial
@@ -900,7 +903,7 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None):
             cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
             ul_deadline_s=row_deadlines if has_deadline else None,
             ul_outage_s=row_outages if has_outage else None,
-            collector=collector,
+            collector=collector, backend=backend,
         ) if rows else []
     out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
                           rounds=[]) for c in cases]
@@ -924,7 +927,9 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                             mode: str = "auto",
                             t_round_hint: float = 10.0,
                             max_t: float = 600.0,
-                            collector=None) -> List[TimelineResult]:
+                            collector=None,
+                            backend: Optional[str] = None,
+                            ) -> List[TimelineResult]:
     """Advance the full multi-round timeline for every case.
 
     ``mode="auto"`` folds the round axis into the batch (one stacked
@@ -950,7 +955,7 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                 "defer); folded mode is unavailable"
             )
         return _async(cfg, cases, schedule, t_round_hint, max_t,
-                      collector=collector)
+                      collector=collector, backend=backend)
     if mode == "auto":
         mode = "sequential" if schedule.couples_rounds else "folded"
     if mode == "folded":
@@ -963,10 +968,10 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
                 "outage-only fault injection"
             )
         return _folded(cfg, cases, schedule, t_round_hint, max_t,
-                       collector=collector)
+                       collector=collector, backend=backend)
     if mode == "sequential":
         return _sequential(cfg, cases, schedule, t_round_hint, max_t,
-                           collector=collector)
+                           collector=collector, backend=backend)
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -975,6 +980,7 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
                                 t_round_hint: float = 10.0,
                                 max_t: float = 600.0,
                                 collector=None,
+                                backend: Optional[str] = None,
                                 ) -> List[TimelineResult]:
     """The PR 2 per-round loop: one engine call per round, queue state
     rebuilt every round. Identical results to ``simulate_timeline_sweep``
@@ -983,9 +989,9 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
     cases = _validate(cases, schedule)
     if schedule.asynchronous:
         return _async(cfg, cases, schedule, t_round_hint, max_t,
-                      collector=collector)
+                      collector=collector, backend=backend)
     return _sequential(cfg, cases, schedule, t_round_hint, max_t,
-                       collector=collector)
+                       collector=collector, backend=backend)
 
 
 # ---------------------------------------------------------------------------
