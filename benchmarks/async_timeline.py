@@ -42,8 +42,9 @@ from repro.net import (  # noqa: E402
     FLRoundWorkload,
     PONConfig,
     SweepCase,
+    SweepSpec,
     TimelineSchedule,
-    simulate_timeline_sweep,
+    simulate,
 )
 
 TIER = "slow"                     # CI's dedicated step runs it instead
@@ -72,26 +73,30 @@ def net_part(n_rounds: int) -> dict:
     cfg = PONConfig(n_onus=N_ONUS)
     case = op_point_case()
     # warm allocators / sampler LUTs
-    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1))
+    simulate(SweepSpec(cases=(case,), pon=cfg,
+                       schedule=TimelineSchedule(n_rounds=1)))
 
     out = {"n_rounds": n_rounds, "load": LOAD, "n_onus": N_ONUS,
            "deadline_s": DEADLINE_S, "buffer_k": BUFFER_K}
     t0 = time.time()
-    sync = simulate_timeline_sweep(
-        cfg, [case], TimelineSchedule(n_rounds=n_rounds),
-    )[0]
+    sync = simulate(SweepSpec(
+        cases=(case,), pon=cfg,
+        schedule=TimelineSchedule(n_rounds=n_rounds),
+    ))[0]
     out["sync_wall_s"] = time.time() - t0
     t0 = time.time()
-    defer = simulate_timeline_sweep(
-        cfg, [case],
-        TimelineSchedule(n_rounds=n_rounds, deadline_s=DEADLINE_S),
-    )[0]
+    defer = simulate(SweepSpec(
+        cases=(case,), pon=cfg,
+        schedule=TimelineSchedule(n_rounds=n_rounds,
+                                  deadline_s=DEADLINE_S),
+    ))[0]
     defer_wall = time.time() - t0
     t0 = time.time()
-    asyn = simulate_timeline_sweep(
-        cfg, [case],
-        TimelineSchedule(n_rounds=n_rounds, buffer_k=BUFFER_K),
-    )[0]
+    asyn = simulate(SweepSpec(
+        cases=(case,), pon=cfg,
+        schedule=TimelineSchedule(n_rounds=n_rounds,
+                                  buffer_k=BUFFER_K),
+    ))[0]
     async_wall = time.time() - t0
     out.update({
         "defer_wall_s": defer_wall,

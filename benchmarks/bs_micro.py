@@ -70,7 +70,7 @@ def run() -> list:
     )
     # one full BS round on the vectorized engine (slice + slots + queues)
     from repro.net import FLRoundWorkload, PONConfig, SweepCase, \
-        simulate_round_sweep
+        SweepSpec, simulate
 
     wl = FLRoundWorkload(
         clients=[ClientProfile(client_id=c.client_id, t_ud=c.t_ud,
@@ -79,10 +79,10 @@ def run() -> list:
         model_bits=M,
     )
     t0 = time.time()
-    r = simulate_round_sweep(
-        PONConfig(n_onus=128),
-        [SweepCase(workload=wl, load=0.8, policy="bs", seed=0)],
-    )[0]
+    r = simulate(SweepSpec(
+        cases=(SweepCase(workload=wl, load=0.8, policy="bs", seed=0),),
+        pon=PONConfig(n_onus=128),
+    ))[0]
     rows.append(
         {
             "name": "bs_engine_round_n128",

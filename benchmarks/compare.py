@@ -113,6 +113,13 @@ def _payload_metrics(payload: dict) -> Dict[str, float]:
                 out[f"{name}.speedup_vs_ref_loop"] = (
                     cell["speedup_vs_ref_loop"]
                 )
+    elif bench == "multi_job_fairness_grid":
+        # J and the fairness policy are embedded in the key so a grid
+        # change un-matches instead of mis-comparing
+        for cell in payload.get("cells", []):
+            name = (f"jobs_grid_n{cell['n_onus']}_j{cell['n_jobs']}"
+                    f"_{cell['fairness']}")
+            out[f"{name}.rounds_per_sec"] = cell["rounds_per_sec"]
     elif bench == "fault_injection_grid":
         # same names as benchmarks/faults.py's harness rows; the rate
         # grid is embedded in the key so a grid change un-matches

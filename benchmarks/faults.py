@@ -50,8 +50,9 @@ from benchmarks.async_timeline import (  # noqa: E402
 from repro.faults import FaultSchedule  # noqa: E402
 from repro.net import (  # noqa: E402
     PONConfig,
+    SweepSpec,
     TimelineSchedule,
-    simulate_timeline_sweep,
+    simulate,
 )
 
 TIER = "fast"
@@ -98,7 +99,8 @@ def grid_part(n_rounds: int, repeats: int = 2) -> dict:
     cfg = PONConfig(n_onus=N_ONUS)
     case = op_point_case()
     # warm allocators / sampler LUTs
-    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1))
+    simulate(SweepSpec(cases=(case,), pon=cfg,
+                       schedule=TimelineSchedule(n_rounds=1)))
 
     cells = []
     for dropout in DROPOUT_RATES:
@@ -107,9 +109,9 @@ def grid_part(n_rounds: int, repeats: int = 2) -> dict:
             for mode in ("sync", "async", "quorum"):
                 sched = _schedule(mode, n_rounds, faults)
                 wall, res = _best_of(
-                    lambda s=sched: simulate_timeline_sweep(
-                        cfg, [case], s
-                    ),
+                    lambda s=sched: simulate(SweepSpec(
+                        cases=(case,), pon=cfg, schedule=s,
+                    )),
                     repeats,
                 )
                 tl = res[0]
@@ -207,16 +209,14 @@ def overhead_part(n_rounds: int, repeats: int = 3) -> dict:
     case = op_point_case()
     sched = _schedule("quorum", n_rounds,
                       _grid_faults(DROPOUT_RATES[-1], OUTAGE_RATES[-1]))
-    simulate_timeline_sweep(cfg, [case], TimelineSchedule(n_rounds=1),
-                            collector=Collector())
+    warm = SweepSpec(cases=(case,), pon=cfg,
+                     schedule=TimelineSchedule(n_rounds=1))
+    simulate(warm, collector=Collector())
 
-    off_wall, off = _best_of(
-        lambda: simulate_timeline_sweep(cfg, [case], sched), repeats
-    )
+    spec = SweepSpec(cases=(case,), pon=cfg, schedule=sched)
+    off_wall, off = _best_of(lambda: simulate(spec), repeats)
     on_wall, on = _best_of(
-        lambda: simulate_timeline_sweep(cfg, [case], sched,
-                                        collector=Collector()),
-        repeats,
+        lambda: simulate(spec, collector=Collector()), repeats
     )
     assert all(
         np.array_equal(a.sync_times, b.sync_times)

@@ -22,7 +22,13 @@ import time
 import numpy as np
 
 from repro.core.slicing import ClientProfile
-from repro.net import FLRoundWorkload, PONConfig, SweepCase, simulate_round_sweep
+from repro.net import (
+    FLRoundWorkload,
+    PONConfig,
+    SweepCase,
+    SweepSpec,
+    simulate,
+)
 
 TIER = "fast"
 
@@ -61,7 +67,8 @@ def run() -> list:
     cases = sweep_cases()
     collector = Collector(keep_phases=False)
     t0 = time.time()
-    results = simulate_round_sweep(cfg, cases, collector=collector)
+    results = simulate(SweepSpec(cases=tuple(cases), pon=cfg),
+                       collector=collector)
     wall = time.time() - t0
     rows = []
     tags = [(policy, load, frac) for policy, load in GRID

@@ -1,0 +1,163 @@
+"""Multi-tenant contention grid: J concurrent jobs on one 2048-ONU PON.
+
+One stacked BS round per cell over jobs ∈ {1, 2, 4, 8} × fairness ∈
+{maxmin, weighted}: the primary FL job plus J-1 half-sized tenants
+contend for the same cycles, and the row records engine throughput
+(the multi-job path is numpy — the jit ponsim backend covers
+single-tenant sweeps only) plus each job's p95 upload-completion time
+through a ``repro.obs`` collector, the hierarchical-slicing
+degradation signal CI tracks.
+
+``python benchmarks/jobs.py --json BENCH_jobs.json`` writes the
+payload ``benchmarks/compare.py`` gates on
+(``jobs_grid_n{N}_j{J}_{fairness}.rounds_per_sec``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from repro.core.slicing import ClientProfile  # noqa: E402
+from repro.net import (  # noqa: E402
+    FLRoundWorkload,
+    JobSpec,
+    PONConfig,
+    SweepCase,
+    SweepSpec,
+    simulate,
+)
+
+TIER = "fast"
+
+M_BITS = 26.416e6
+N_ONUS = 2048
+LOAD = 0.8
+CLIENTS_PER_JOB = 8
+JOB_GRID = (1, 2, 4, 8)
+FAIRNESS_GRID = ("maxmin", "weighted")
+
+
+def _case(n_jobs: int, fairness: str) -> SweepCase:
+    """The primary job + (n_jobs-1) half-sized, double-weight tenants."""
+    rng = np.random.default_rng(42)
+    ids = list(range(n_jobs * CLIENTS_PER_JOB))
+    jobs = []
+    clients = []
+    for j in range(n_jobs):
+        cids = ids[j * CLIENTS_PER_JOB:(j + 1) * CLIENTS_PER_JOB]
+        mb = M_BITS if j == 0 else 0.5 * M_BITS
+        jobs.append(JobSpec(job_id=j, clients=tuple(cids),
+                            model_bits=mb,
+                            weight=1.0 if j == 0 else 2.0))
+        clients.extend(
+            ClientProfile(client_id=i, t_ud=float(rng.uniform(1.0, 5.0)),
+                          t_dl=0.0, m_ud_bits=mb)
+            for i in cids
+        )
+    wl = FLRoundWorkload(clients=clients, model_bits=M_BITS)
+    return SweepCase(workload=wl, load=LOAD, policy="bs", seed=0,
+                     jobs=tuple(jobs), fairness=fairness)
+
+
+def _best_of(f, repeats):
+    best, out = float("inf"), None
+    for _ in range(max(repeats, 1)):
+        t0 = time.time()
+        out = f()
+        best = min(best, time.time() - t0)
+    return best, out
+
+
+def _per_job_p95(case: SweepCase, res) -> dict:
+    """p95 upload-completion per job via the obs histogram machinery."""
+    from repro.obs import Collector
+
+    col = Collector()
+    for job in case.jobs:
+        col.record_upload_times(
+            f"job{job.job_id}", case.load,
+            [res.ul_done[cid] for cid in job.clients],
+        )
+    return {
+        int(key[0][3:]): float(hist.percentile(95.0))
+        for key, hist in col.delay_hist.items()
+    }
+
+
+def measure(repeats: int = 2, n_onus: int = N_ONUS) -> dict:
+    cfg = PONConfig(n_onus=n_onus)
+    # warm allocators and the sampler LUTs
+    simulate(SweepSpec(cases=(_case(2, "maxmin"),), pon=cfg))
+    cells = []
+    for fairness in FAIRNESS_GRID:
+        for n_jobs in JOB_GRID:
+            case = _case(n_jobs, fairness)
+            spec = SweepSpec(cases=(case,), pon=cfg)
+            wall, res = _best_of(lambda s=spec: simulate(s)[0], repeats)
+            cells.append({
+                "n_onus": n_onus,
+                "n_jobs": n_jobs,
+                "fairness": fairness,
+                "wall_s": wall,
+                "rounds_per_sec": 1.0 / wall,
+                "sync_s": float(res.sync_time),
+                "primary_sync_s": float(res.job_stats[0].sync_time),
+                "per_job_p95_s": _per_job_p95(case, res),
+            })
+    return {
+        "benchmark": "multi_job_fairness_grid",
+        "n_onus": n_onus,
+        "load": LOAD,
+        "policy": "bs",
+        "clients_per_job": CLIENTS_PER_JOB,
+        "cells": cells,
+    }
+
+
+def run() -> list:
+    rows = []
+    for cell in measure(repeats=1)["cells"]:
+        p95 = cell["per_job_p95_s"]
+        rows.append({
+            "name": (f"jobs_n{cell['n_onus']}_j{cell['n_jobs']}"
+                     f"_{cell['fairness']}"),
+            "us_per_call": cell["wall_s"] * 1e6,
+            "derived": (
+                f"rounds_per_sec={cell['rounds_per_sec']:.2f} "
+                f"sync_s={cell['sync_s']:.3f} "
+                f"p95_job0={p95[0]:.3f}s"
+            ),
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the measurement payload as JSON")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--n-onus", type=int, default=N_ONUS)
+    args = ap.parse_args(argv)
+
+    m = measure(repeats=args.repeats, n_onus=args.n_onus)
+    print(json.dumps(m, indent=2))
+    if args.json:
+        from benchmarks._env import stamp
+
+        with open(args.json, "w") as f:
+            json.dump(stamp(m), f, indent=2)
+            f.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,8 +42,9 @@ from repro.net import (
     MultiPonTopology,
     PONConfig,
     SweepCase,
+    SweepSpec,
+    simulate,
     simulate_multi_pon_round,
-    simulate_round_sweep,
 )
 
 TIER = "fast"
@@ -81,7 +82,7 @@ def run_stacked(n_total, n_pons, seed=0):
     cfg = _pon_cfg(n_total, n_pons)
     case = _stacked_case(n_total, n_pons, seed)
     t0 = time.time()
-    res = simulate_round_sweep(cfg, [case])[0]
+    res = simulate(SweepSpec(cases=(case,), pon=cfg))[0]
     return time.time() - t0, res
 
 
@@ -102,10 +103,11 @@ def run_per_pon_loop(n_total, n_pons, seed=0):
             for i in ids
         ]
         wl = FLRoundWorkload(clients=clients, model_bits=M_BITS)
-        r = simulate_round_sweep(
-            cfg,
-            [SweepCase(workload=wl, load=LOAD, policy=POLICY, seed=seed)],
-        )[0]
+        r = simulate(SweepSpec(
+            cases=(SweepCase(workload=wl, load=LOAD, policy=POLICY,
+                             seed=seed),),
+            pon=cfg,
+        ))[0]
         sync = max(sync, r.sync_time)
     return time.time() - t0, sync
 
@@ -160,13 +162,15 @@ def cps_contention_demo(n_total=256, n_pons=4, provisioning=0.9) -> dict:
     and the CPS binds only on the bursts and the FL upload wave)."""
     cfg = _pon_cfg(n_total, n_pons)
     case = _stacked_case(n_total, n_pons)
-    free = simulate_round_sweep(cfg, [case])[0]
+    free = simulate(SweepSpec(cases=(case,), pon=cfg))[0]
     tight_rate = provisioning * n_pons * cfg.line_rate_bps
     tight_topo = MultiPonTopology(n_pons=n_pons, cps_rate_bps=tight_rate)
-    tight = simulate_round_sweep(
-        cfg, [SweepCase(workload=case.workload, load=LOAD, policy=POLICY,
-                        seed=case.seed, topology=tight_topo)],
-    )[0]
+    tight = simulate(SweepSpec(
+        cases=(SweepCase(workload=case.workload, load=LOAD,
+                         policy=POLICY, seed=case.seed,
+                         topology=tight_topo),),
+        pon=cfg,
+    ))[0]
     return {
         "n_onus": n_total,
         "n_pons": n_pons,
@@ -179,7 +183,8 @@ def cps_contention_demo(n_total=256, n_pons=4, provisioning=0.9) -> dict:
 
 def measure(full: bool = False) -> dict:
     # warm allocators, jit caches and sampler LUTs
-    simulate_round_sweep(_pon_cfg(64, 2), [_stacked_case(64, 2)])
+    simulate(SweepSpec(cases=(_stacked_case(64, 2),),
+                       pon=_pon_cfg(64, 2)))
     cells = [measure_cell(*FAST_CELL, with_loop=True,
                           with_ref_loop=True)]
     if full:

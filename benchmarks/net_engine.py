@@ -26,8 +26,9 @@ from repro.net import (
     FLRoundWorkload,
     PONConfig,
     SweepCase,
+    SweepSpec,
+    simulate,
     simulate_round,
-    simulate_round_sweep,
 )
 
 TIER = "fast"
@@ -69,7 +70,7 @@ def time_engine_sweep(cfg=None, cases=None, repeats: int = 3):
     best = float("inf")
     for _ in range(max(repeats, 1)):
         t0 = time.time()
-        results = simulate_round_sweep(cfg, cases)
+        results = simulate(SweepSpec(cases=tuple(cases), pon=cfg))
         best = min(best, time.time() - t0)
     return best, results
 
@@ -99,11 +100,15 @@ def engine_throughput(n_onus_grid=(128, 512, 2048), policy="fcfs",
     for n in n_onus_grid:
         cfg = PONConfig(n_onus=n, line_rate_bps=10e9 * n / 128)
         wl = FLRoundWorkload(clients=_clients(n, n), model_bits=M_BITS)
-        case = [SweepCase(workload=wl, load=load, policy=policy, seed=0)]
+        spec = SweepSpec(
+            cases=(SweepCase(workload=wl, load=load, policy=policy,
+                             seed=0),),
+            pon=cfg, backend=backend,
+        )
         if backend is not None:
-            simulate_round_sweep(cfg, case, backend=backend)
+            simulate(spec)
         t0 = time.time()
-        r = simulate_round_sweep(cfg, case, backend=backend)[0]
+        r = simulate(spec)[0]
         wall = time.time() - t0
         out.append({
             "n_onus": n,
@@ -128,7 +133,7 @@ def measure(full: bool = False) -> dict:
     cfg = PONConfig(n_onus=N_ONUS)
     cases = _fig2b_cases()
     # warm up allocators/caches so neither side pays one-time costs
-    simulate_round_sweep(cfg, cases[:1])
+    simulate(SweepSpec(cases=tuple(cases[:1]), pon=cfg))
     eng_wall, eng_results = time_engine_sweep(cfg, cases)
     if full:
         ref_wall, ref_results = time_reference_sweep(cfg, cases)

@@ -30,7 +30,7 @@ sys.path.insert(
 )
 
 from benchmarks.timeline import elastic_schedule, fig3_cases  # noqa: E402
-from repro.net import PONConfig, simulate_timeline_sweep  # noqa: E402
+from repro.net import PONConfig, SweepSpec, simulate  # noqa: E402
 
 TIER = "fast"
 
@@ -54,20 +54,19 @@ def measure(repeats: int = 3, n_rounds: int = N_ROUNDS) -> dict:
     cases = fig3_cases()
     sched = elastic_schedule(n_rounds)
     # warm allocators, sampler LUTs and the obs module itself
-    simulate_timeline_sweep(cfg, cases[:1], elastic_schedule(1),
-                            collector=Collector())
+    simulate(SweepSpec(cases=tuple(cases[:1]), pon=cfg,
+                       schedule=elastic_schedule(1)),
+             collector=Collector())
 
-    off_wall, off = _best_of(
-        lambda: simulate_timeline_sweep(cfg, cases, sched, mode="folded"),
-        repeats,
-    )
+    spec = SweepSpec(cases=tuple(cases), pon=cfg, schedule=sched,
+                     mode="folded")
+    off_wall, off = _best_of(lambda: simulate(spec), repeats)
     collectors = []
 
     def run_on():
         col = Collector(tracer=SpanTracer())
         collectors.append(col)
-        return simulate_timeline_sweep(cfg, cases, sched, mode="folded",
-                                       collector=col)
+        return simulate(spec, collector=col)
 
     on_wall, on = _best_of(run_on, repeats)
     assert all(

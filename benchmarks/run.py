@@ -31,6 +31,7 @@ def collect_modules(tier: str):
         faults,
         fig2a_accuracy,
         fig2b_sync_time,
+        jobs,
         multi_pon,
         net_engine,
         obs_overhead,
@@ -45,6 +46,7 @@ def collect_modules(tier: str):
         ("training_time_saving", training_time_saving),
         ("net_engine", net_engine),
         ("multi_pon", multi_pon),
+        ("jobs", jobs),
         ("timeline", timeline),
         ("async_timeline", async_timeline),
         ("faults", faults),

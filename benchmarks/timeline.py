@@ -35,9 +35,10 @@ from repro.net import (
     FLRoundWorkload,
     PONConfig,
     SweepCase,
+    SweepSpec,
     TimelineSchedule,
+    simulate,
     simulate_timeline_per_round,
-    simulate_timeline_sweep,
 )
 
 TIER = "slow"                     # CI's dedicated step runs it instead
@@ -91,7 +92,8 @@ def profile_shares(cfg, cases, schedule):
     (kernels/traffic) vs the engine cycle loop (net/engine+timeline)."""
     prof = cProfile.Profile()
     prof.enable()
-    simulate_timeline_sweep(cfg, cases, schedule, mode="folded")
+    simulate(SweepSpec(cases=tuple(cases), pon=cfg,
+                       schedule=schedule, mode="folded"))
     prof.disable()
     stats = pstats.Stats(prof)
     shares = {"kernels/traffic": 0.0, "net/engine": 0.0, "other": 0.0}
@@ -134,11 +136,12 @@ def throughput(n_onus_grid=(128, 512, 2048), n_rounds=4, load=0.8,
         sched = elastic_schedule(n_rounds, n)
         case = [SweepCase(workload=wl, load=load, policy="fcfs",
                           seed=0)]
+        spec = SweepSpec(cases=tuple(case), pon=cfg, schedule=sched,
+                         backend=backend)
         if backend is not None:
-            simulate_timeline_sweep(cfg, case, sched, backend=backend)
+            simulate(spec)
         t0 = time.time()
-        res = simulate_timeline_sweep(
-            cfg, case, sched, backend=backend)[0]
+        res = simulate(spec)[0]
         wall = time.time() - t0
         out.append({
             "n_onus": n,
@@ -176,7 +179,8 @@ def stacked_run(n_pons=100, onus_per_pon=1024, n_rounds=2,
     cases = [SweepCase(workload=wl, load=load, policy="fcfs", seed=0,
                        topology=topo)]
     t0 = time.time()
-    res = simulate_timeline_sweep(cfg, cases, sched, backend="jit")[0]
+    res = simulate(SweepSpec(cases=tuple(cases), pon=cfg,
+                             schedule=sched, backend="jit"))[0]
     wall = time.time() - t0
     return {
         "n_onus_total": n_total,
@@ -200,11 +204,12 @@ def measure(full: bool = False) -> dict:
     cases = fig3_cases()
     sched = elastic_schedule(n_rounds)
     # warm allocators, jit caches and sampler LUTs
-    simulate_timeline_sweep(cfg, cases[:1], elastic_schedule(1))
+    simulate(SweepSpec(cases=tuple(cases[:1]), pon=cfg,
+                       schedule=elastic_schedule(1)))
 
     fold_wall, fold = _best_of(
-        lambda: simulate_timeline_sweep(cfg, cases, sched,
-                                        mode="folded"),
+        lambda: simulate(SweepSpec(cases=tuple(cases), pon=cfg,
+                                   schedule=sched, mode="folded")),
         repeats=3 if full else 2,
     )
     per_round_wall, per_round = _best_of(

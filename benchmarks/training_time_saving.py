@@ -23,9 +23,9 @@ from repro.net import (
     FLRoundWorkload,
     PONConfig,
     SweepCase,
+    SweepSpec,
     TimelineSchedule,
-    simulate_round_sweep,
-    simulate_timeline_sweep,
+    simulate,
 )
 
 TIER = "fast"
@@ -78,7 +78,7 @@ def run() -> list:
         SweepCase(workload=wl, load=LOAD, policy=policy, seed=s)
         for policy in ("fcfs", "bs") for s in range(SEEDS)
     ]
-    results = simulate_round_sweep(cfg, cases)
+    results = simulate(SweepSpec(cases=tuple(cases), pon=cfg))
     sim_fcfs = np.mean([r.sync_time for r in results[:SEEDS]])
     sim_bs = np.mean([r.sync_time for r in results[SEEDS:]])
     an_fcfs = analytic_serialized(clients, LOAD, cfg)
@@ -89,7 +89,9 @@ def run() -> list:
     # the saving compounds over the whole training wall-clock
     t1 = time.time()
     sched = TimelineSchedule(n_rounds=N_ROUNDS)
-    tl = simulate_timeline_sweep(PONConfig(n_onus=N_ONUS), cases, sched)
+    tl = simulate(SweepSpec(cases=tuple(cases),
+                            pon=PONConfig(n_onus=N_ONUS),
+                            schedule=sched))
     total_fcfs = np.mean([r.total_time_s for r in tl[:SEEDS]])
     total_bs = np.mean([r.total_time_s for r in tl[SEEDS:]])
     save_multi = 100.0 * (1 - total_bs / total_fcfs)

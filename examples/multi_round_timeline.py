@@ -16,8 +16,9 @@ from repro.net import (
     FLRoundWorkload,
     PONConfig,
     SweepCase,
+    SweepSpec,
     TimelineSchedule,
-    simulate_timeline_sweep,
+    simulate,
 )
 
 M_BITS = 26.416e6
@@ -39,11 +40,13 @@ def main():
         for policy in ("fcfs", "bs")
     ]
 
+    spec = SweepSpec(cases=tuple(cases), pon=cfg)
+
     membership = rng.random((R, N)) < 0.75
     membership[0] = True
     sched = TimelineSchedule(n_rounds=R, membership=membership)
     print(f"== {R} rounds, elastic membership (75% per round), load 0.8")
-    for case, tl in zip(cases, simulate_timeline_sweep(cfg, cases, sched)):
+    for case, tl in zip(cases, simulate(spec.with_schedule(sched))):
         print(
             f"  {case.policy:4s} per-round sync "
             f"{np.round(tl.sync_times, 2)}  total={tl.total_time_s:.1f}s"
@@ -53,8 +56,7 @@ def main():
     sched_d = TimelineSchedule(n_rounds=R, membership=membership,
                                deadline_s=deadline)
     print(f"== same sweep under a {deadline}s round deadline (defer)")
-    for case, tl in zip(cases,
-                        simulate_timeline_sweep(cfg, cases, sched_d)):
+    for case, tl in zip(cases, simulate(spec.with_schedule(sched_d))):
         deferred = sum(len(r.deferred) for r in tl.rounds)
         print(
             f"  {case.policy:4s} total={tl.total_time_s:.1f}s "

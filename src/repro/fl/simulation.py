@@ -29,17 +29,19 @@ sync/drop/defer/partial/async under both DBA policies.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.slicing import ClientProfile
 from repro.faults import FaultSchedule, RetryPolicy
-from repro.net.engine import SweepCase, simulate_round_sweep
+from repro.net.api import SweepSpec, simulate
+from repro.net.engine import SweepCase
+from repro.net.jobs import JobSpec
 from repro.net.multi_pon import MultiPonTopology
 from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
-from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
+from repro.net.timeline import TimelineSchedule
 from repro.fl.server import CPSServer
 
 
@@ -66,6 +68,13 @@ class CoSimConfig:
     faults: Optional[FaultSchedule] = None
     retry: Optional[RetryPolicy] = None
     quorum_frac: Optional[float] = None
+    # multi-tenant contention: competitor jobs (repro.net.jobs.JobSpec,
+    # job_id >= 1) sharing the PON/CPS with this FL task, plus the
+    # ClientProfiles backing their client ids; the primary task becomes
+    # job 0 and every round's capacity is split by ``fairness``
+    jobs: Optional[Tuple[JobSpec, ...]] = None
+    job_clients: Optional[Tuple[ClientProfile, ...]] = None
+    fairness: str = "maxmin"
 
     @classmethod
     def from_fed_model(cls, model_cfg, compress: str = "int8", **kw):
@@ -114,6 +123,21 @@ class FLNetworkCoSim:
         self._update_bits_from_compression = False
         self._collector = cfg.collector
 
+    def _jobs_bundle(
+        self, clients: List[ClientProfile],
+    ) -> Tuple[List[ClientProfile], Optional[tuple]]:
+        """(workload clients incl. tenant clients, full jobs tuple) —
+        the primary task becomes job 0 over the server's clients."""
+        if self.cfg.jobs is None:
+            return clients, None
+        primary = JobSpec(
+            job_id=0,
+            clients=tuple(sorted(c.client_id for c in clients)),
+            model_bits=float(self.cfg.model_bits),
+        )
+        return (clients + list(self.cfg.job_clients or ()),
+                (primary,) + tuple(self.cfg.jobs))
+
     def _round_sync_time(self, clients: List[ClientProfile]) -> float:
         # the key must pin every cfg field the timing depends on —
         # model_bits/upload_bits included, or mutating cfg between
@@ -125,27 +149,36 @@ class FLNetworkCoSim:
             self.cfg.upload_bits,
             self.cfg.pon,
             self.cfg.topology,
+            self.cfg.jobs,
+            self.cfg.job_clients,
+            self.cfg.fairness,
             tuple(sorted((c.client_id, round(c.t_ud, 6), c.m_ud_bits)
                          for c in clients)),
         )
         if key not in self._timing_cache:
+            wl_clients, jobs = self._jobs_bundle(clients)
             wl = FLRoundWorkload(
-                clients=clients, model_bits=self.cfg.model_bits
+                clients=wl_clients, model_bits=self.cfg.model_bits
             )
             # all timing seeds run as one stacked engine simulation
-            results = simulate_round_sweep(
-                self.cfg.pon,
-                [
+            results = simulate(SweepSpec(
+                cases=tuple(
                     SweepCase(workload=wl, load=self.cfg.total_load,
                               policy=self.cfg.policy, seed=s,
-                              topology=self.cfg.topology)
+                              topology=self.cfg.topology, jobs=jobs,
+                              fairness=self.cfg.fairness)
                     for s in range(self.cfg.timing_seeds)
-                ],
-                collector=self._collector,
-            )
-            self._timing_cache[key] = float(
-                np.mean([r.sync_time for r in results])
-            )
+                ),
+                pon=self.cfg.pon,
+            ), collector=self._collector)
+            # multi-tenant rounds gate on the PRIMARY job's sync time —
+            # competitor jobs contend for capacity but do not hold this
+            # task's aggregation open
+            self._timing_cache[key] = float(np.mean([
+                r.sync_time if jobs is None
+                else r.job_stats[0].sync_time
+                for r in results
+            ]))
         return self._timing_cache[key]
 
     def _client_profiles(
@@ -189,6 +222,40 @@ class FLNetworkCoSim:
             for p in profs:
                 union.setdefault(p.client_id, p)
         ids = sorted(union)
+        if self.cfg.jobs is not None:
+            # multi-tenant timelines take a plain schedule (per-round
+            # membership/size rewrites are single-tenant features), so
+            # the client set and upload size must be static across
+            # rounds — per-job cadence goes through JobSpec instead
+            static = all(
+                {p.client_id for p in profs} == set(ids)
+                for profs in per_round
+            ) and len({float(b) for b in m_bits}) <= 1
+            if not static or self.cfg.faults is not None:
+                raise ValueError(
+                    "multi-tenant co-simulation needs a static client "
+                    "set, uniform upload size and no fault schedule "
+                    "on the decoupled timeline backend; use "
+                    "backend='per_round' for varying rounds"
+                )
+            wl_clients, jobs = self._jobs_bundle([union[c] for c in ids])
+            wl = FLRoundWorkload(
+                clients=wl_clients, model_bits=self.cfg.model_bits,
+            )
+            results = simulate(SweepSpec(
+                cases=tuple(
+                    SweepCase(workload=wl, load=self.cfg.total_load,
+                              policy=self.cfg.policy, seed=s,
+                              topology=self.cfg.topology, jobs=jobs,
+                              fairness=self.cfg.fairness)
+                    for s in range(self.cfg.timing_seeds)
+                ),
+                pon=self.cfg.pon,
+                schedule=TimelineSchedule(n_rounds=R),
+            ), collector=self._collector)
+            return np.mean([
+                [rnd.job_sync[0] for rnd in r.rounds] for r in results
+            ], axis=0)
         pos = {cid: j for j, cid in enumerate(ids)}
         membership = np.zeros((R, len(ids)), bool)
         for r, profs in enumerate(per_round):
@@ -203,15 +270,16 @@ class FLNetworkCoSim:
             m_ud_bits=np.asarray(m_bits),
             faults=self.cfg.faults,
         )
-        results = simulate_timeline_sweep(
-            self.cfg.pon,
-            [SweepCase(workload=wl, load=self.cfg.total_load,
-                       policy=self.cfg.policy, seed=s,
-                       topology=self.cfg.topology)
-             for s in range(self.cfg.timing_seeds)],
-            schedule,
-            collector=self._collector,
-        )
+        results = simulate(SweepSpec(
+            cases=tuple(
+                SweepCase(workload=wl, load=self.cfg.total_load,
+                          policy=self.cfg.policy, seed=s,
+                          topology=self.cfg.topology)
+                for s in range(self.cfg.timing_seeds)
+            ),
+            pon=self.cfg.pon,
+            schedule=schedule,
+        ), collector=self._collector)
         return np.mean([r.sync_times for r in results], axis=0)
 
     def _run_coupled(
@@ -266,14 +334,13 @@ class FLNetworkCoSim:
             faults=self.cfg.faults, retry=self.cfg.retry,
             quorum_frac=self.cfg.quorum_frac,
         )
-        net = simulate_timeline_sweep(
-            self.cfg.pon,
-            [SweepCase(workload=wl, load=self.cfg.total_load,
-                       policy=self.cfg.policy, seed=0,
-                       topology=self.cfg.topology)],
-            schedule,
-            collector=self._collector,
-        )[0]
+        net = simulate(SweepSpec(
+            cases=(SweepCase(workload=wl, load=self.cfg.total_load,
+                             policy=self.cfg.policy, seed=0,
+                             topology=self.cfg.topology),),
+            pon=self.cfg.pon,
+            schedule=schedule,
+        ), collector=self._collector)[0]
         by_id = {c.client_id: c for c in self.server.clients}
         pending: Dict[int, "PendingUpdate"] = {}
         rounds = []
@@ -356,8 +423,16 @@ class FLNetworkCoSim:
         deadline_policy: str = "defer",
         async_buffer: Optional[int] = None,
         collector=None,
+        spec: Optional[SweepSpec] = None,
     ) -> CoSimResult:
         """Train ``n_rounds`` rounds and attach simulated network timing.
+
+        ``spec`` (``repro.net.SweepSpec``, optional) re-points the
+        network side at a spec template: its single case supplies
+        (policy, load, topology, fairness) and ``spec.pon`` the PON
+        config — the case's workload is replaced by the server's
+        clients each round, and the co-sim builds its own schedule
+        from ``n_rounds`` (schedule-bearing specs are rejected).
 
         ``backend="timeline"`` (default) resolves all rounds' timings in
         one stacked multi-round simulation after training;
@@ -383,6 +458,25 @@ class FLNetworkCoSim:
 
         if collector is not None:
             self._collector = collector
+        if spec is not None:
+            spec.validate()
+            if spec.schedule is not None:
+                raise ValueError(
+                    "the co-sim builds its own schedule from "
+                    "n_rounds; pass a schedule-free spec"
+                )
+            if len(spec.cases) != 1:
+                raise ValueError(
+                    "co-sim spec needs exactly one template case (its "
+                    "workload is replaced by the server's clients)"
+                )
+            case = spec.cases[0]
+            self.cfg = _dc_replace(
+                self.cfg, policy=case.policy, total_load=case.load,
+                topology=case.topology, fairness=case.fairness,
+                pon=spec.pon if spec.pon is not None else self.cfg.pon,
+            )
+            self._timing_cache.clear()
         if backend not in ("timeline", "per_round"):
             raise ValueError(f"unknown backend {backend!r}")
         if mode not in ("sync", "async"):
@@ -393,6 +487,12 @@ class FLNetworkCoSim:
             # with a deadline fails in TimelineSchedule's validation
             mode = "async"
         coupled = mode == "async" or deadline_s is not None
+        if coupled and self.cfg.jobs is not None:
+            raise ValueError(
+                "multi-tenant contention (cfg.jobs) takes per-job "
+                "deadlines (JobSpec.deadline_s, fairness='deadline'); "
+                "round-level deadline/async coupling is single-tenant"
+            )
         if not coupled:
             if (self.cfg.faults is not None
                     and self.cfg.faults.couples_rounds):

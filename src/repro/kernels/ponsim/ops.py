@@ -39,6 +39,14 @@ returns ``None`` and the engine transparently re-runs that phase on
 the numpy path, so the backend is *always* exact, merely slower in
 regimes the device program was not sized for.
 
+Multi-tenant sweeps (``SweepCase.jobs``, PR 9) are NOT compiled: the
+per-cycle inter-job fairness split (``repro.net.jobs.job_fair_split``)
+and the per-job prefix spending would add a ragged job axis to every
+carry above.  The engine silently clears ``use_jit`` for multi-job
+sweeps and runs the numpy path (documented in DESIGN.md §12); a
+degenerate all-single-job sweep normalises to the plain layout and
+keeps this backend.
+
 Precision policy: queue state is float64, so the program is built and
 called under a scoped ``jax.experimental.enable_x64()`` context — the
 global x64 flag is never flipped for library users (regression-tested).

@@ -39,22 +39,30 @@ _ROTS = _ref._ROTS
 _PON_WEYL_0 = 0xCC9E2D51
 _PON_WEYL_1 = 0x1B873593
 
+# Weyl constants mixing a tenant-job index into a stream key (murmur3
+# final-avalanche / xorshift-mult constants; distinct from both the PON
+# pair above and ref.KEY_WEYL_* for the same no-aliasing reason).
+_JOB_WEYL_0 = 0xC2B2AE35
+_JOB_WEYL_1 = 0x27D4EB2F
+
 
 def make_stream_key(seed: int, phase: int, round_index: int = 0,
-                    pon: int = 0) -> np.ndarray:
-    """uint32 ``(2,)`` key for one case's (phase, round, pon) stream.
+                    pon: int = 0, job: int = 0) -> np.ndarray:
+    """uint32 ``(2,)`` key for one case's (phase, round, pon, job) stream.
 
     ``seed`` fills one key word, ``(phase, round)`` the other, and the
-    PON index Weyl-shifts both words; threefry does the mixing.
-    Distinct (seed, phase, round, pon) tuples therefore get independent
-    streams, and a stream's values depend on nothing else — the
-    O(1)-seek contract. ``pon=0`` reproduces the pre-multi-PON key
-    bit-for-bit (pinned by the stream regressions).
+    PON and job indices Weyl-shift both words; threefry does the
+    mixing. Distinct (seed, phase, round, pon, job) tuples therefore
+    get independent streams, and a stream's values depend on nothing
+    else — the O(1)-seek contract. ``pon=0`` reproduces the
+    pre-multi-PON key bit-for-bit, and ``job=0`` the pre-multi-job key
+    (both pinned by the stream regressions).
     """
     return np.array(
         [
-            (seed + pon * _PON_WEYL_0) & _MASK32,
-            (phase + 2 * round_index + pon * _PON_WEYL_1) & _MASK32,
+            (seed + pon * _PON_WEYL_0 + job * _JOB_WEYL_0) & _MASK32,
+            (phase + 2 * round_index + pon * _PON_WEYL_1
+             + job * _JOB_WEYL_1) & _MASK32,
         ],
         np.uint32,
     )

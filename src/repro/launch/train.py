@@ -33,10 +33,12 @@ from repro.faults import FaultSchedule
 from repro.data import TokenBatcher, lm_tokens
 from repro.dist import stepfns
 from repro.launch.mesh import make_host_mesh
+from repro.net.api import SweepSpec, simulate
 from repro.net.engine import SweepCase
+from repro.net.jobs import JobSpec, make_competing_jobs
 from repro.net.multi_pon import MultiPonTopology
 from repro.net.sim import FLRoundWorkload, PONConfig
-from repro.net.timeline import TimelineSchedule, simulate_timeline_sweep
+from repro.net.timeline import TimelineSchedule
 from repro.optim.optimizers import OptimizerConfig
 from repro.optim.schedules import warmup_cosine
 
@@ -70,9 +72,20 @@ def train(
     loss_rate: float = 0.0,
     fault_seed: int = 0,
     quorum: Optional[float] = None,
+    jobs: int = 0,
+    fairness: str = "maxmin",
 ):
     from repro.obs import Collector, EventLog, SpanTracer
     from repro.obs.trace import maybe_span
+
+    if jobs > 0 and (deadline_s is not None or async_buffer is not None
+                     or quorum is not None or dropout_rate > 0.0
+                     or outage_rate > 0.0 or loss_rate > 0.0):
+        raise ValueError(
+            "--jobs contention runs plain rounds: deadlines, async "
+            "buffering, fault injection and quorum are single-tenant "
+            "features (per-job deadlines go through JobSpec.deadline_s)"
+        )
 
     cfg = get_config(arch, smoke=smoke).replace(grad_accum=1)
     if config_overrides:
@@ -176,7 +189,9 @@ def train(
         # i % (n_pons * n_onus) with PON = onu // n_onus, so spreading
         # the pods over the stack needs n_onus = ceil(pods / n_pons)
         # exactly (any larger floor would cluster them on PON 0).
-        n_clients = max(pods, 2)
+        # competitor jobs (--jobs) add 2 clients each above the pods,
+        # so the ONU stack must cover the whole tenant population
+        n_clients = max(pods, 2) + 2 * max(jobs, 0)
         if n_pons > 1:
             pon = PONConfig(n_onus=max(1, -(-n_clients // n_pons)))
         else:
@@ -200,22 +215,47 @@ def train(
                 seed=fault_seed, dropout_rate=dropout_rate,
                 outage_rate=outage_rate, loss_rate=loss_rate,
             )
+        job_specs = None
+        if jobs > 0:
+            # the pods' FL task becomes tenant job 0; --jobs competitor
+            # jobs (half-size models, 2 clients each) contend with it
+            # under --fairness inside the same PON/CPS cycle
+            comp, extra = make_competing_jobs(
+                [p.client_id for p in profiles], down_bits, jobs
+            )
+            job_specs = (JobSpec(
+                job_id=0,
+                clients=tuple(p.client_id for p in profiles),
+                model_bits=down_bits,
+            ),) + comp
+            profiles = profiles + list(extra)
+            log.emit("jobs", echo="tenant jobs: {n} competitors "
+                     "(fairness={fairness})", n=jobs, fairness=fairness)
         wl = FLRoundWorkload(clients=profiles, model_bits=down_bits)
         n_net_rounds = max(rounds, 1)
+        net_spec = SweepSpec(
+            cases=(SweepCase(workload=wl, load=load, policy=policy,
+                             seed=0, topology=topology, jobs=job_specs,
+                             fairness=fairness),),
+            pon=pon,
+            schedule=TimelineSchedule(n_rounds=n_net_rounds,
+                                      deadline_s=deadline_s,
+                                      deadline_policy=deadline_policy,
+                                      buffer_k=async_buffer,
+                                      faults=faults,
+                                      quorum_frac=quorum),
+        )
         with maybe_span(collector, "net:timeline", rounds=n_net_rounds):
-            timeline = simulate_timeline_sweep(
-                pon,
-                [SweepCase(workload=wl, load=load, policy=policy, seed=0,
-                           topology=topology)],
-                TimelineSchedule(n_rounds=n_net_rounds,
-                                 deadline_s=deadline_s,
-                                 deadline_policy=deadline_policy,
-                                 buffer_k=async_buffer,
-                                 faults=faults,
-                                 quorum_frac=quorum),
-                collector=collector,
-            )[0]
-        sync_times = timeline.sync_times
+            timeline = simulate(net_spec, collector=collector)[0]
+        if job_specs is not None:
+            # the pods' wall clock follows THEIR job's sync time; the
+            # competitors only show up as contention
+            sync_times = np.array([
+                rnd.job_sync.get(0, rnd.sync_time)
+                for rnd in timeline.rounds
+            ])
+        else:
+            sync_times = timeline.sync_times
 
         wall_simulated = 0.0
         # pods whose failed upload is retrying (they re-enter the
@@ -384,6 +424,14 @@ def main(argv=None):
                     help="quorum aggregation: a round commits only "
                          "when at least this fraction of pending "
                          "uploads arrived (needs --deadline)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="competitor FL jobs contending with the pods' "
+                         "task inside the same PON/CPS cycle (each "
+                         "brings 2 clients and a half-size model)")
+    ap.add_argument("--fairness", default="maxmin",
+                    choices=("maxmin", "weighted", "deadline"),
+                    help="how each cycle's capacity is split across "
+                         "tenant jobs")
     args = ap.parse_args(argv)
     train(
         arch=args.arch, smoke=args.smoke, steps_per_round=args.steps,
@@ -398,6 +446,7 @@ def main(argv=None):
         dropout_rate=args.dropout_rate, outage_rate=args.outage_rate,
         loss_rate=args.loss_rate, fault_seed=args.fault_seed,
         quorum=args.quorum,
+        jobs=args.jobs, fairness=args.fairness,
     )
 
 

@@ -1,19 +1,38 @@
-"""PON network substrate: traffic, DBA engines, round + timeline sims."""
-from repro.faults import (  # noqa: F401  (re-export: timeline fault model)
+"""PON network substrate: traffic, DBA engines, round + timeline sims.
+
+The curated surface is ``__all__``: build a :class:`SweepSpec` and run
+it with :func:`simulate`; the ``simulate_*`` functions remain as
+compatibility entry points (their keyword forms are deprecated) and as
+parity oracles. Everything else in the submodules is internal.
+"""
+from repro.faults import (
     FaultSchedule,
     RetryPolicy,
 )
-from repro.net.engine import (  # noqa: F401
+from repro.net.api import (
+    SweepSpec,
+    simulate,
+)
+from repro.net.engine import (
     SweepCase,
     simulate_round_sweep,
 )
-from repro.net.multi_pon import (  # noqa: F401
+from repro.net.jobs import (
+    FAIRNESS_POLICIES,
+    JobRoundStats,
+    JobSpec,
+    job_fair_split,
+    make_competing_jobs,
+    simulate_jobs_round_reference,
+)
+from repro.net.multi_pon import (
     MultiPonTopology,
     cps_waterfill,
     pon_bg_rates,
     simulate_multi_pon_round,
 )
-from repro.net.timeline import (  # noqa: F401
+from repro.net.timeline import (
+    DEADLINE_POLICIES,
     TimelineResult,
     TimelineRound,
     TimelineSchedule,
@@ -21,20 +40,20 @@ from repro.net.timeline import (  # noqa: F401
     simulate_timeline_reference,
     simulate_timeline_sweep,
 )
-from repro.net.dba import (  # noqa: F401
+from repro.net.dba import (
     DEFAULT_EFFICIENCY,
     FCFSBestEffort,
     FCFSLimitedService,
     OnuQueue,
     SlicedDBA,
 )
-from repro.net.sim import (  # noqa: F401
+from repro.net.sim import (
     FLRoundWorkload,
     PONConfig,
     RoundResult,
     simulate_round,
 )
-from repro.net.traffic import (  # noqa: F401
+from repro.net.traffic import (
     PACKET_BITS,
     CounterSource,
     CounterStream,
@@ -44,3 +63,55 @@ from repro.net.traffic import (  # noqa: F401
     burst_lambda,
     per_onu_sources,
 )
+
+__all__ = [
+    # spec facade (preferred entry point)
+    "SweepSpec",
+    "simulate",
+    # sweep building blocks
+    "SweepCase",
+    "PONConfig",
+    "FLRoundWorkload",
+    "RoundResult",
+    # multi-tenant jobs
+    "FAIRNESS_POLICIES",
+    "JobSpec",
+    "JobRoundStats",
+    "job_fair_split",
+    "make_competing_jobs",
+    "simulate_jobs_round_reference",
+    # multi-PON topology
+    "MultiPonTopology",
+    "cps_waterfill",
+    "pon_bg_rates",
+    "simulate_multi_pon_round",
+    # timelines
+    "DEADLINE_POLICIES",
+    "TimelineSchedule",
+    "TimelineRound",
+    "TimelineResult",
+    "simulate_timeline_sweep",
+    "simulate_timeline_per_round",
+    "simulate_timeline_reference",
+    # faults (re-export: timeline fault model)
+    "FaultSchedule",
+    "RetryPolicy",
+    # single-round entry points / oracles
+    "simulate_round_sweep",
+    "simulate_round",
+    # DBA engines
+    "DEFAULT_EFFICIENCY",
+    "FCFSBestEffort",
+    "FCFSLimitedService",
+    "OnuQueue",
+    "SlicedDBA",
+    # traffic sources
+    "PACKET_BITS",
+    "CounterSource",
+    "CounterStream",
+    "PoissonSource",
+    "PrecomputedSource",
+    "background_rate_for_load",
+    "burst_lambda",
+    "per_onu_sources",
+]

@@ -27,20 +27,31 @@ waterfill (``repro.net.multi_pon``):
   consume the same arrival process (property-tested).
 
 Public API: ``SweepCase`` + ``simulate_round_sweep`` (a whole sweep as
-one stacked simulation); ``repro.net.sim.simulate_round`` uses this as
-its default backend.
+one stacked simulation — legacy kwarg form; prefer building a
+``repro.net.SweepSpec`` and calling ``simulate(spec)``);
+``repro.net.sim.simulate_round`` uses this as its default backend.
+Multi-tenant cases (``SweepCase.jobs``) add a job axis: columns gain a
+job binding next to ``cid_of`` and each cycle's FL capacity is split
+across jobs by the case's fairness policy (``repro.net.jobs``).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.scheduler import schedule_slots, slots_to_arrays
 from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
+from repro.net.jobs import (
+    FAIRNESS_POLICIES,
+    compute_job_stats,
+    job_fair_split,
+    validate_case_jobs,
+)
 from repro.net.multi_pon import (
     MultiPonTopology,
     cps_waterfill,
@@ -80,6 +91,14 @@ class SweepCase:
     sharing a CPS uplink (``repro.net.multi_pon.MultiPonTopology``);
     every case of a sweep must share one topology. ``None`` is the
     single-PON network described by the ``PONConfig`` alone.
+
+    ``jobs`` (tuple of ``repro.net.jobs.JobSpec``) makes the case
+    multi-tenant: the jobs must partition ``workload.clients`` exactly,
+    each job's downlink broadcasts its OWN ``model_bits``, and every
+    cycle's FL capacity is split across jobs by ``fairness``
+    (``"maxmin"`` | ``"weighted"`` | ``"deadline"``) before the
+    per-queue grants. A sweep where every case has exactly one job runs
+    the single-tenant path bitwise and only adds per-job stats.
     """
 
     workload: "FLRoundWorkload"  # noqa: F821  (imported lazily, no cycle)
@@ -91,6 +110,8 @@ class SweepCase:
     stream_round: int = 0
     no_dl_ids: frozenset = frozenset()
     topology: Optional[MultiPonTopology] = None
+    jobs: Optional[tuple] = None          # Tuple[JobSpec, ...]
+    fairness: str = "maxmin"
 
 
 # ---------------------------------------------------------------------------
@@ -519,24 +540,34 @@ class _FLQueues:
             mask, np.maximum(ready_t, t), self.push_time
         )
 
-    def backlog_per_onu(self) -> np.ndarray:
+    def backlog_per_onu(self, mask: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+        """Per-ONU FL backlog; ``mask`` (multi-tenant jobs) restricts
+        the sum to one job's columns. ``mask=None`` keeps the
+        single-tenant paths bitwise (including the aliased identity
+        view)."""
         lay = self.lay
         if lay.identity:
-            return self.qb          # aliased view: callers read only
+            if mask is None:
+                return self.qb      # aliased view: callers read only
+            return np.where(mask, self.qb, 0.0)
+        qb = self.qb if mask is None else np.where(mask, self.qb, 0.0)
         out = np.zeros((self.B, self.N))
         if self.single:
-            out[:, lay.seg_onus] = self.qb
+            out[:, lay.seg_onus] = qb
         else:
             out[:, lay.seg_onus] = np.add.reduceat(
-                self.qb, lay.seg_starts, axis=1
+                qb, lay.seg_starts, axis=1
             )
         return out
 
-    def _heads(self):
+    def _heads(self, mask: Optional[np.ndarray] = None):
         """(head_exists, head_pos, budget_seg aligner) per ONU segment."""
         lay = self.lay
         nU = np.int64(lay.n_clients)
         nonzero = self.qb > 0.0
+        if mask is not None:
+            nonzero = nonzero & mask
         pk = np.where(nonzero, self.push_key, 0)
         combined = np.where(nonzero, pk * nU + lay.pos, _IKEY_INF)
         m = np.minimum.reduceat(combined, lay.seg_starts, axis=1)
@@ -544,41 +575,55 @@ class _FLQueues:
         pos = np.where(has, m % nU, 0)
         return has, pos
 
-    def hol_per_onu(self) -> np.ndarray:
+    def hol_per_onu(self, mask: Optional[np.ndarray] = None
+                    ) -> np.ndarray:
         lay = self.lay
+        live = self.qb > 0.0
+        if mask is not None:
+            live = live & mask
         if lay.identity:
-            return np.where(self.qb > 0.0, self.push_time, np.inf)
+            return np.where(live, self.push_time, np.inf)
         out = np.full((self.B, self.N), np.inf)
         if self.single:
             out[:, lay.seg_onus] = np.where(
-                self.qb > 0.0, self.push_time, np.inf
+                live, self.push_time, np.inf
             )
             return out
-        has, pos = self._heads()
+        has, pos = self._heads(mask)
         times = np.where(
             has, self.push_time[self._bidx, pos], np.inf
         )
         out[:, lay.seg_onus] = times
         return out
 
-    def serve(self, grants_onu: np.ndarray, backlog_onu: np.ndarray):
+    def serve(self, grants_onu: np.ndarray, backlog_onu: np.ndarray,
+              mask: Optional[np.ndarray] = None):
         """Drain FIFO heads per ONU, reproducing ``OnuQueue.serve``'s
-        1-bit segment compaction (which also charges the grant)."""
+        1-bit segment compaction (which also charges the grant).
+
+        With ``mask`` (multi-tenant jobs) the grant is one job's share
+        and only that job's columns drain — ``backlog_onu`` must then
+        be the same-masked per-ONU backlog."""
         lay = self.lay
         if self.single:
             budget = (grants_onu if lay.identity
                       else grants_onu[:, lay.onu])
             act = (budget > CAP_EPS) & (self.qb > 0.0)
+            if mask is not None:
+                act = act & mask
             take = np.where(act, np.minimum(budget, self.qb), 0.0)
             drop = act & (self.qb - take <= SEG_EPS)
             self.qb = np.where(drop, 0.0, self.qb - take)
             return
         full = (grants_onu > 0.0) & (grants_onu == backlog_onu)
         if np.any(full):
-            self.qb = np.where(full[:, lay.onu], 0.0, self.qb)
+            zero = full[:, lay.onu]
+            if mask is not None:
+                zero = zero & mask
+            self.qb = np.where(zero, 0.0, self.qb)
         budget = np.where(full, 0.0, grants_onu)[:, lay.seg_onus]
         while True:
-            has, pos = self._heads()
+            has, pos = self._heads(mask)
             srv = has & (budget > CAP_EPS)
             if not np.any(srv):
                 break
@@ -637,6 +682,89 @@ def _slot_grants(slot_arrays, backlog_onu, t: float, cyc: float,
     return out
 
 
+def _job_grants_fcfs(fl: _FLQueues, ctx, cap_fl: np.ndarray, t: float):
+    """Per-job FCFS grant plan: split the FL residual capacity across
+    jobs by the fairness policy on per-job total backlog, then
+    oldest-first waterfill each job's share over its own queues.
+
+    Returns ``(mask, grants_onu, backlog_onu)`` triples, one per job.
+    The inter-job split is per PON row — the CPS coupling stays at the
+    (case, pon) level because background demand entangles the rows
+    before jobs are distinguishable.
+    """
+    masks = ctx["masks"]
+    bos = [fl.backlog_per_onu(m) for m in masks]
+    demand = np.stack([bo.sum(axis=1) for bo in bos], axis=1)
+    shares = job_fair_split(demand, cap_fl, ctx["fairness"],
+                            weights=ctx["weights"],
+                            slack=ctx["deadlines"] - t)
+    return [
+        (m, _waterfill(bos[j], functools.partial(fl.hol_per_onu, m),
+                       shares[:, j]), bos[j])
+        for j, m in enumerate(masks)
+    ]
+
+
+def _job_grants_bs(slot_arrays, fl: _FLQueues, ctx, t: float, cyc: float,
+                   cap: np.ndarray, n_onus: int,
+                   cps_cap: Optional[float], n_pons: int):
+    """Per-job SlicedDBA grant plan.
+
+    Slot wants are computed exactly like ``_slot_grants`` (overlap *
+    slice rate, capped by the owning job's backlog at the slot's ONU),
+    aggregated into per-(row, job) demand for the fairness split —
+    re-capped by the CPS waterfill over the flattened ``(pon, job)``
+    shares of each case when a CPS rate binds — and each job's slots
+    then spend prefix room within the job's own share.
+    """
+    ts, te, onu_idx, rate, valid, sjob = slot_arrays
+    B, S = ts.shape
+    masks = ctx["masks"]
+    J = len(masks)
+    bos = [fl.backlog_per_onu(m) for m in masks]
+    te_g = te + cyc
+    active = valid & (ts < t + cyc) & (te_g > t)
+    # best-effort tail: inter-job fairness / CPS re-capping can
+    # throttle a job below its scheduled slice rate, leaving backlog
+    # when its window closes; an expired slot keeps requesting at the
+    # slice rate so contended bits drain instead of starving
+    tail = valid & (te_g <= t)
+    if not np.any(active | tail):
+        zero = np.zeros((B, n_onus))
+        return [(m, zero, bos[j]) for j, m in enumerate(masks)]
+    overlap = np.minimum(te_g, t + cyc) - np.maximum(ts, t)
+    want = np.where(active, rate * np.maximum(overlap, 0.0),
+                    np.where(tail, rate * cyc, 0.0))
+    bidx = np.arange(B)[:, None]
+    want = np.minimum(want, np.stack(bos)[sjob, bidx, onu_idx])
+    want = np.where(want > 0.0, want, 0.0)
+    demand = np.stack(
+        [np.where(sjob == j, want, 0.0).sum(axis=1) for j in range(J)],
+        axis=1,
+    )
+    shares = job_fair_split(demand, cap, ctx["fairness"],
+                            weights=ctx["weights"],
+                            slack=ctx["deadlines"] - t)
+    if cps_cap is not None:
+        # the (case, pon, job) waterfill: a case's bs rows are its
+        # n_pons consecutive rows, so reshaping shares pon-major /
+        # job-minor puts each case's P*J slices in one waterfill row
+        shares = cps_waterfill(
+            shares.reshape(-1, n_pons * J), cps_cap
+        ).reshape(B, J)
+    plan = []
+    for j, m in enumerate(masks):
+        wj = np.where(sjob == j, want, 0.0)
+        prefix = np.cumsum(wj, axis=1)
+        gj = np.minimum(
+            wj, np.maximum(shares[:, j:j + 1] - (prefix - wj), 0.0)
+        )
+        out = np.zeros((B, n_onus))
+        np.add.at(out, (np.broadcast_to(bidx, (B, S)), onu_idx), gj)
+        plan.append((m, out, bos[j]))
+    return plan
+
+
 # ---------------------------------------------------------------------------
 # phase runner
 # ---------------------------------------------------------------------------
@@ -649,7 +777,8 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                cps_cap: Optional[float] = None, n_pons: int = 1,
                deadline_row: Optional[np.ndarray] = None,
                outage_row: Optional[np.ndarray] = None,
-               collector=None, phase_label: str = ""):
+               collector=None, phase_label: str = "",
+               jobs_ctx=None):
     """One transfer phase for a (policy-homogeneous) batch of rows.
 
     Rows are ``(case, pon)`` pairs (case-major); ``cap_row`` is each
@@ -691,6 +820,13 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
     ``collector=None`` the instrumentation is a single identity check
     per cycle and every output is bitwise unchanged: the accumulators
     only *read* arrays the phase already computed.
+
+    ``jobs_ctx`` (multi-tenant sweeps) carries the per-row job masks,
+    weights, deadlines and the fairness policy: each cycle's FL
+    capacity is first split across jobs (``_job_grants_fcfs`` /
+    ``_job_grants_bs``) and every job drains only its own queues
+    within its share. ``None`` (single-tenant) keeps the grant/serve
+    sequence bitwise unchanged.
     """
     B = rem_init.shape[0]
     N = cfg.n_onus
@@ -759,6 +895,7 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 ob_fl_depth = backlog_onu.sum(axis=1)
                 if use_bg:
                     ob_bg_depth = bg.backlog.sum(axis=1)
+            plan = None
             if mode == "fcfs":
                 if cps_cap is None:
                     eff = cap_cyc
@@ -774,10 +911,14 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                         ob_cps_w, ob_cps_e = want, eff
                 bg_grants = _waterfill(bg.backlog, bg.hol_key, eff)
                 cap_fl = eff - bg_grants.sum(axis=1)
-                fl_grants = _waterfill(
-                    backlog_onu, fl.hol_per_onu, cap_fl
-                )
-            else:
+                if jobs_ctx is None:
+                    fl_grants = _waterfill(
+                        backlog_onu, fl.hol_per_onu, cap_fl
+                    )
+                else:
+                    plan = _job_grants_fcfs(fl, jobs_ctx, cap_fl, t)
+                    fl_grants = sum(g for _, g, _ in plan)
+            elif jobs_ctx is None:
                 fl_grants = _slot_grants(slot_arrays, backlog_onu, t,
                                          cyc, cap_cyc, N)
                 if cps_cap is not None:
@@ -791,6 +932,10 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                         fl_grants = _slot_grants(
                             slot_arrays, backlog_onu, t, cyc, eff, N
                         )
+            else:
+                plan = _job_grants_bs(slot_arrays, fl, jobs_ctx, t, cyc,
+                                      cap_cyc, N, cps_cap, n_pons)
+                fl_grants = sum(g for _, g, _ in plan)
             if obs is not None:
                 ob_fl_g = fl_grants.sum(axis=1)
                 if use_bg:
@@ -799,7 +944,12 @@ def _run_phase(cfg, lay: _Layout, rem_init, ready_t,
                 bg.serve(bg_grants, k)
             if np.any(fl_grants > 0.0):
                 prev_qb = fl.qb.copy()
-                fl.serve(fl_grants, backlog_onu)
+                if plan is None:
+                    fl.serve(fl_grants, backlog_onu)
+                else:
+                    for mask_j, g_j, bo_j in plan:
+                        if np.any(g_j > 0.0):
+                            fl.serve(g_j, bo_j, mask_j)
                 rem, done, done_t = _credit(
                     rem, done, done_t, prev_qb - fl.qb, t + cyc + prop
                 )
@@ -912,6 +1062,42 @@ def _stack_slots(per_row, n_onus: int):
     return ts, te, onu, rate, valid
 
 
+def _stack_slots_jobs(per_row, n_onus: int):
+    """Pad per-(row, job) slot arrays to a common ``(B, S)`` shape.
+
+    ``per_row[b]`` is a list of ``(job_index, spec, arrays)`` triples
+    in job order. Unlike ``_stack_slots``, ``rate`` is per-slot — each
+    job carves its own slice, so one row holds several bandwidths —
+    and ``sjob`` binds every slot to its owning job (padding binds to
+    job 0 with ``valid`` False, contributing zero demand).
+    """
+    B = len(per_row)
+    S = max(
+        (sum(len(a["client_id"]) for _, _, a in row) for row in per_row),
+        default=0,
+    ) or 1
+    ts = np.full((B, S), np.inf)
+    te = np.full((B, S), -np.inf)
+    onu = np.zeros((B, S), np.int64)
+    rate = np.zeros((B, S))
+    valid = np.zeros((B, S), bool)
+    sjob = np.zeros((B, S), np.int64)
+    for b, row in enumerate(per_row):
+        s0 = 0
+        for j, spec, a in row:
+            s = len(a["client_id"])
+            if not s:
+                continue
+            ts[b, s0:s0 + s] = a["t_start"]
+            te[b, s0:s0 + s] = a["t_end"]
+            onu[b, s0:s0 + s] = a["client_id"] % n_onus
+            rate[b, s0:s0 + s] = spec.bandwidth_bps
+            valid[b, s0:s0 + s] = True
+            sjob[b, s0:s0 + s] = j
+            s0 += s
+    return ts, te, onu, rate, valid, sjob
+
+
 def _sweep_topology(cases: Sequence[SweepCase]) -> MultiPonTopology:
     """The one topology shared by every case (None ≡ trivial)."""
     topos = {case.topology for case in cases}
@@ -926,14 +1112,106 @@ def _sweep_topology(cases: Sequence[SweepCase]) -> MultiPonTopology:
     return topo
 
 
-def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
-                         t_round_hint: float = 10.0,
-                         max_t: float = 600.0,
-                         ul_deadline_s=None,
-                         ul_outage_s=None,
-                         collector=None,
-                         backend: Optional[str] = None,
-                         ) -> List["RoundResult"]:
+def _check_jobs_cases(cases: Sequence[SweepCase]):
+    """Every case carries jobs partitioning its workload, or none do."""
+    for b, case in enumerate(cases):
+        if case.jobs is None:
+            raise ValueError(
+                f"cases[{b}] has no jobs but the sweep carries jobs; "
+                "give every case a jobs tuple (or none)"
+            )
+        try:
+            validate_case_jobs(case.jobs, case.workload)
+        except ValueError as e:
+            raise ValueError(f"cases[{b}]: {e}") from None
+
+
+def _multi_job_fairness(cases: Sequence[SweepCase], ul_deadline_s,
+                        ul_outage_s) -> str:
+    """Validate a genuinely multi-tenant sweep; returns its fairness."""
+    if ul_deadline_s is not None or ul_outage_s is not None:
+        raise ValueError(
+            "multi-job sweeps take per-job deadlines "
+            "(JobSpec.deadline_s under fairness='deadline'), not "
+            "round-level ul_deadline_s/ul_outage_s"
+        )
+    fair = {case.fairness for case in cases}
+    if len(fair) != 1:
+        raise ValueError(
+            f"sweep cases must share one fairness policy; "
+            f"got {sorted(fair)}"
+        )
+    fairness = fair.pop()
+    if fairness not in FAIRNESS_POLICIES:
+        raise ValueError(
+            f"unknown fairness policy {fairness!r}; "
+            f"have {FAIRNESS_POLICIES}"
+        )
+    for b, case in enumerate(cases):
+        if case.dl_arrivals is not None or case.ul_arrivals is not None:
+            raise ValueError(
+                f"cases[{b}]: injected arrivals are a single-tenant "
+                "parity hook; multi-job cases draw counter streams"
+            )
+        if case.no_dl_ids:
+            raise ValueError(
+                f"cases[{b}]: no_dl_ids (deadline carriers) do not "
+                "compose with multi-job cases"
+            )
+    return fairness
+
+
+def _record_job_uploads(collector, case: SweepCase, res):
+    """Per-job upload-time recording (``<policy>/job<id>`` keys)."""
+    if collector is None or not res.job_stats:
+        return
+    ul = res.ul_done
+    for job in case.jobs:
+        times = [
+            ul[cid] for cid in job.clients
+            if cid in ul and np.isfinite(ul[cid])
+        ]
+        if times:
+            collector.record_upload_times(
+                f"{case.policy}/job{job.job_id}", case.load, times
+            )
+
+
+def _single_job_sweep(cfg, cases: Sequence[SweepCase], **kw):
+    """Degenerate jobs sweeps — every case has exactly one job — run on
+    the single-tenant path (bitwise identical to a no-jobs sweep of the
+    same workloads, preserving the PR 8 pins) and get their
+    ``job_stats`` attached post-hoc."""
+    from repro.net.sim import FLRoundWorkload
+
+    norm = []
+    for case in cases:
+        job = case.jobs[0]
+        wl = case.workload
+        if float(job.model_bits) != float(wl.model_bits):
+            wl = FLRoundWorkload(
+                clients=wl.clients, model_bits=float(job.model_bits),
+                t_aggregate=wl.t_aggregate,
+            )
+        norm.append(replace(case, jobs=None, workload=wl))
+    results = _round_sweep(cfg, norm, **kw)
+    topo = _sweep_topology(list(cases))
+    for case, res in zip(cases, results):
+        res.job_stats = compute_job_stats(
+            case.jobs, res.ul_done, cfg.n_onus, topo.n_pons
+        )
+        _record_job_uploads(kw.get("collector"), case, res)
+    return results
+
+
+def _round_sweep(cfg, cases: Sequence[SweepCase],
+                 t_round_hint: float = 10.0,
+                 max_t: float = 600.0,
+                 ul_deadline_s=None,
+                 ul_outage_s=None,
+                 collector=None,
+                 backend: Optional[str] = None,
+                 ) -> List["RoundResult"]:
     """Simulate every sweep case as one stacked array simulation.
 
     Semantics match ``repro.net.sim.simulate_round``'s reference
@@ -1002,11 +1280,26 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 "backend='jit' does not support injected arrival "
                 "matrices; use the numpy backend"
             )
+    jobs_any = any(case.jobs is not None for case in cases)
+    fairness = None
+    if jobs_any:
+        _check_jobs_cases(cases)
+        if not any(len(case.jobs) > 1 for case in cases):
+            return _single_job_sweep(
+                cfg, cases, t_round_hint=t_round_hint, max_t=max_t,
+                ul_deadline_s=ul_deadline_s, ul_outage_s=ul_outage_s,
+                collector=collector, backend=backend,
+            )
+        fairness = _multi_job_fairness(cases, ul_deadline_s, ul_outage_s)
+        if use_jit:
+            # kernels/ponsim carries no job axis: multi-job sweeps fall
+            # back to the numpy engine transparently (DESIGN §12)
+            use_jit = False
     topo = _sweep_topology(cases)
     P = topo.n_pons
     n_local = cfg.n_onus
     total_onus = P * n_local
-    for case in cases:
+    for b, case in enumerate(cases):
         if case.policy not in ("fcfs", "bs"):
             raise ValueError(f"unknown policy {case.policy!r}")
         if case.policy == "bs":
@@ -1016,6 +1309,17 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 raise ValueError(
                     "bs policy requires client_id < n_onus * n_pons; "
                     f"got {bad}"
+                )
+        for name in ("dl_arrivals", "ul_arrivals"):
+            arr = getattr(case, name)
+            if arr is None:
+                continue
+            a = np.asarray(arr, np.float64)
+            if a.ndim != 2 or a.shape[1] != total_onus:
+                raise ValueError(
+                    f"cases[{b}].{name} must be 2-D with "
+                    f"n_pons * n_onus = {total_onus} columns; "
+                    f"got shape {np.shape(arr)}"
                 )
     lay = _layout_for(cases, n_local, P)
     B = len(cases)
@@ -1027,7 +1331,12 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     cps_cap = topo.cps_capacity_bits(cfg)
     per_onu_rate = np.stack([
         pon_bg_rates(c.workload.clients, c.workload.model_bits, c.load,
-                     cfg, topo, t_round_hint)
+                     cfg, topo, t_round_hint,
+                     model_bits_by_client=(
+                         None if c.jobs is None else
+                         {cid: float(job.model_bits)
+                          for job in c.jobs for cid in job.clients}
+                     ))
         for c in cases
     ])                                                  # (B, n_pons)
     per_case_dl = isinstance(ul_deadline_s, (list, tuple, np.ndarray))
@@ -1077,6 +1386,49 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             for p in range(P):
                 no_dl[b * P + p] = np.isin(lay.cid_of[p], skip)
     no_dl &= lay.part
+
+    # multi-tenant jobs: the per-row job axis next to the slot layout —
+    # every live column binds to its owning job (jcol), carries its
+    # job's model bits (mb), and every row knows its jobs' weights and
+    # soft deadlines for the fairness split. Sweeps mixing job counts
+    # pad to the max J with zero-demand phantom jobs, which every
+    # fairness policy grants nothing.
+    jobs_info = None
+    if jobs_any:
+        J = max(len(case.jobs) for case in cases)
+        jcol = np.full((R, lay.n_clients), -1, np.int64)
+        mb_col = np.zeros((R, lay.n_clients))
+        w_row = np.ones((R, J))
+        dl_jrow = np.full((R, J), np.inf)
+        for b, case in enumerate(cases):
+            jidx_of = {cid: j for j, job in enumerate(case.jobs)
+                       for cid in job.clients}
+            mb_of = {cid: float(job.model_bits) for job in case.jobs
+                     for cid in job.clients}
+            for p in range(P):
+                r = b * P + p
+                for col in np.nonzero(lay.part[r])[0]:
+                    cid = int(lay.cid_of[p, col])
+                    jcol[r, col] = jidx_of[cid]
+                    mb_col[r, col] = mb_of[cid]
+            for j, job in enumerate(case.jobs):
+                w_row[b * P:(b + 1) * P, j] = float(job.weight)
+                if job.deadline_s is not None:
+                    dl_jrow[b * P:(b + 1) * P, j] = float(job.deadline_s)
+        jobs_info = {"J": J, "jcol": jcol, "mb": mb_col, "w": w_row,
+                     "dl": dl_jrow, "fairness": fairness}
+
+    def jobs_ctx_for(sel):
+        """Row-sliced per-job phase context (None when single-tenant)."""
+        if jobs_info is None:
+            return None
+        jc = jobs_info["jcol"][sel]
+        return {
+            "masks": [jc == j for j in range(jobs_info["J"])],
+            "weights": jobs_info["w"][sel],
+            "deadlines": jobs_info["dl"][sel],
+            "fairness": jobs_info["fairness"],
+        }
 
     def providers(sel, phase):
         from repro.kernels.traffic.ops import make_stream_key
@@ -1157,26 +1509,25 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
     )
     if len(fcfs_rows):
         sub = lay.rows(fcfs_rows)
-        rem0 = np.where(
-            sub.part & ~no_dl[fcfs_rows],
-            np.array([cases[row_case[r]].workload.model_bits
-                      for r in fcfs_rows])[:, None],
-            0.0,
-        )
+        if jobs_info is None:
+            bits = np.array([cases[row_case[r]].workload.model_bits
+                             for r in fcfs_rows])[:, None]
+        else:
+            bits = jobs_info["mb"][fcfs_rows]
+        rem0 = np.where(sub.part & ~no_dl[fcfs_rows], bits, 0.0)
         ready0 = np.zeros_like(rem0)
         with maybe_span(collector, "phase:dl:fcfs", rows=len(fcfs_rows)):
             dl_done[fcfs_rows], _ = run_phase(
                 sub, rem0, ready0, fcfs_rows, "dl", "fcfs",
                 max_t=max_t, cap_row=cap_row[fcfs_rows], cps_cap=cps_cap,
                 n_pons=P, collector=collector, phase_label="dl:fcfs",
+                jobs_ctx=jobs_ctx_for(fcfs_rows),
             )
     for r in bs_rows:
         b, p = int(row_case[r]), int(row_pon[r])
-        t_bcast = (
-            cases[b].workload.model_bits
-            / (rates_pon[p] * cfg.efficiency)
-            + cfg.propagation_s
-        )
+        mb = (cases[b].workload.model_bits if jobs_info is None
+              else jobs_info["mb"][r])
+        t_bcast = mb / (rates_pon[p] * cfg.efficiency) + cfg.propagation_s
         dl_done[r] = np.where(lay.part[r], t_bcast, np.nan)
     dl_done = np.where(no_dl, 0.0, dl_done)
 
@@ -1199,33 +1550,60 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 outage_row=(None if outage_row is None
                             else outage_row[fcfs_rows]),
                 collector=collector, phase_label="ul:fcfs",
+                jobs_ctx=jobs_ctx_for(fcfs_rows),
             )
     if len(bs_rows):
         per_row = []
+        per_row_jobs = []
         for r in bs_rows:
             b, p = int(row_case[r]), int(row_pon[r])
             dl_map = {
                 int(lay.cid_of[p, j]): float(dl_done[r, j])
                 for j in range(lay.n_clients) if lay.part[r, j]
             }
-            profiles = [
-                ClientProfile(
-                    client_id=c.client_id,
-                    t_ud=c.t_ud,
-                    t_dl=dl_map[c.client_id],
-                    m_ud_bits=c.m_ud_bits,
-                    distance_m=c.distance_m,
+            if jobs_info is None:
+                profiles = [
+                    ClientProfile(
+                        client_id=c.client_id,
+                        t_ud=c.t_ud,
+                        t_dl=dl_map[c.client_id],
+                        m_ud_bits=c.m_ud_bits,
+                        distance_m=c.distance_m,
+                    )
+                    for c in cases[b].workload.clients
+                    if c.client_id in dl_map
+                ]
+                spec, arrays = _bs_slice(
+                    profiles, float(rates_pon[p] * cfg.efficiency)
                 )
-                for c in cases[b].workload.clients
-                if c.client_id in dl_map
-            ]
-            spec, arrays = _bs_slice(
-                profiles, float(rates_pon[p] * cfg.efficiency)
-            )
-            if P == 1:
-                specs[b] = spec
-            per_row.append((spec, arrays))
-        slot_arrays = _stack_slots(per_row, n_local)
+                if P == 1:
+                    specs[b] = spec
+                per_row.append((spec, arrays))
+            else:
+                # each job carves its own slice over its own clients;
+                # slots stay grouped job-major, matching the oracle
+                row_slots = []
+                for j, job in enumerate(cases[b].jobs):
+                    jset = set(job.clients)
+                    profiles = [
+                        ClientProfile(
+                            client_id=c.client_id,
+                            t_ud=c.t_ud,
+                            t_dl=dl_map[c.client_id],
+                            m_ud_bits=c.m_ud_bits,
+                            distance_m=c.distance_m,
+                        )
+                        for c in cases[b].workload.clients
+                        if c.client_id in dl_map and c.client_id in jset
+                    ]
+                    spec, arrays = _bs_slice(
+                        profiles, float(rates_pon[p] * cfg.efficiency)
+                    )
+                    row_slots.append((j, spec, arrays))
+                per_row_jobs.append(row_slots)
+        slot_arrays = (_stack_slots(per_row, n_local)
+                       if jobs_info is None
+                       else _stack_slots_jobs(per_row_jobs, n_local))
         sub = lay.rows(bs_rows)
         rem0 = np.where(sub.part, sub.m_ud, 0.0)
         ready = np.where(sub.part, ready_t[bs_rows], np.inf)
@@ -1239,6 +1617,7 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
                 outage_row=(None if outage_row is None
                             else outage_row[bs_rows]),
                 collector=collector, phase_label="ul:bs",
+                jobs_ctx=jobs_ctx_for(bs_rows),
             )
 
     # ---- assemble --------------------------------------------------------
@@ -1292,5 +1671,66 @@ def simulate_round_sweep(cfg, cases: Sequence[SweepCase],
             load=case.load,
             slice_spec=specs.get(b),
             ul_remaining=remaining if has_dl else None,
+            job_stats=(None if case.jobs is None else
+                       compute_job_stats(case.jobs, ul, n_local, P)),
         ))
+        if case.jobs is not None:
+            _record_job_uploads(collector, case, results[-1])
     return results
+
+
+def simulate_round_sweep(cfg, cases=None,
+                         t_round_hint: float = 10.0,
+                         max_t: float = 600.0,
+                         ul_deadline_s=None,
+                         ul_outage_s=None,
+                         collector=None,
+                         backend: Optional[str] = None,
+                         ) -> List["RoundResult"]:
+    """Public round-sweep entry point.
+
+    Preferred form: pass a ``repro.net.SweepSpec`` —
+    ``simulate_round_sweep(spec)`` or ``simulate_round_sweep(cfg,
+    spec)`` with an explicit ``PONConfig`` — which validates the bundle
+    once and dispatches to the engine (``repro.net.api.simulate`` is
+    the same call). The spec must not carry a ``schedule``; timelines
+    go through ``simulate_timeline_sweep``/``simulate``.
+
+    The legacy kwarg form ``simulate_round_sweep(cfg, cases,
+    t_round_hint=..., ul_deadline_s=..., ...)`` still works, emits a
+    ``DeprecationWarning``, and delegates to the same engine —
+    results are identical (asserted in ``tests/test_api.py``). See
+    ``_round_sweep`` for the full semantics of every knob.
+    """
+    from repro.net.api import SweepSpec, simulate
+
+    spec = None
+    pon = None
+    if isinstance(cfg, SweepSpec):
+        if cases is not None:
+            raise TypeError(
+                "simulate_round_sweep(spec) takes no second argument; "
+                "put the PONConfig in spec.pon or call "
+                "simulate_round_sweep(cfg, spec)"
+            )
+        spec = cfg
+    elif isinstance(cases, SweepSpec):
+        spec, pon = cases, cfg
+    if spec is not None:
+        if spec.schedule is not None:
+            raise ValueError(
+                "spec carries a schedule; call simulate(spec) or "
+                "simulate_timeline_sweep(spec) for timelines"
+            )
+        return simulate(spec, pon, collector=collector)
+    warnings.warn(
+        "simulate_round_sweep(cfg, cases, **kwargs) is deprecated; "
+        "build a repro.net.SweepSpec and call simulate(spec) "
+        "(or pass the spec to simulate_round_sweep)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _round_sweep(
+        cfg, cases, t_round_hint=t_round_hint, max_t=max_t,
+        ul_deadline_s=ul_deadline_s, ul_outage_s=ul_outage_s,
+        collector=collector, backend=backend,
+    )

@@ -160,13 +160,18 @@ def cps_waterfill(want: np.ndarray, cap) -> np.ndarray:
 
 def pon_bg_rates(clients: Sequence[ClientProfile], model_bits: float,
                  total_load: float, cfg, topo: MultiPonTopology,
-                 t_round_hint: float = 10.0) -> np.ndarray:
+                 t_round_hint: float = 10.0,
+                 model_bits_by_client=None) -> np.ndarray:
     """Per-ONU background rate ``(n_pons,)`` of each wavelength segment.
 
     Each PON's offered background makes up ``total_load`` on *its*
     wavelength given its own share of the training traffic (the
     clients placed on it); with ``n_pons == 1`` this is exactly the
     single-PON split the engine has always used.
+
+    ``model_bits_by_client`` (multi-tenant jobs) prices each client's
+    downlink at its *own job's* model size instead of the shared
+    ``model_bits``; ``None`` keeps the single-job arithmetic bitwise.
     """
     rates = topo.rates(cfg)
     total = topo.total_onus(cfg)
@@ -174,14 +179,19 @@ def pon_bg_rates(clients: Sequence[ClientProfile], model_bits: float,
     for p in range(topo.n_pons):
         cl = [c for c in clients
               if (c.client_id % total) // cfg.n_onus == p]
-        if cl:
+        if not cl:
+            training_rate = 0.0
+        elif model_bits_by_client is not None:
+            training_rate = sum(
+                model_bits_by_client[c.client_id] + c.m_ud_bits
+                for c in cl
+            ) / max(t_round_hint, 1e-9)
+        else:
             training_rate = (
                 len(cl)
                 * (model_bits + float(np.mean([c.m_ud_bits for c in cl])))
                 / max(t_round_hint, 1e-9)
             )
-        else:
-            training_rate = 0.0
         out[p] = background_rate_for_load(
             total_load, float(rates[p]), training_rate
         ) / cfg.n_onus

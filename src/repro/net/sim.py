@@ -70,6 +70,9 @@ class RoundResult:
     # at the cutoff per client (their ul_done is NaN); the multi-round
     # timeline defers these to the next round
     ul_remaining: Optional[Dict[int, float]] = None
+    # set when the case carried tenant jobs: job_id -> JobRoundStats
+    # with per-job ONU/OLT/CPS-tier aggregation times (repro.net.jobs)
+    job_stats: Optional[Dict[int, "JobRoundStats"]] = None  # noqa: F821
 
     @property
     def comm_overhead(self) -> float:
@@ -311,9 +314,9 @@ def simulate_round(
         raise ValueError(f"unknown backend {backend!r}")
     if (backend in ("vectorized", "jit") and _dl_sources is None
             and _ul_sources is None):
-        from repro.net.engine import SweepCase, simulate_round_sweep
+        from repro.net.engine import SweepCase, _round_sweep
 
-        return simulate_round_sweep(
+        return _round_sweep(
             cfg,
             [SweepCase(workload=workload, load=total_load, policy=policy,
                        seed=seed, stream_round=stream_round,

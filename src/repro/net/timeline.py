@@ -59,13 +59,14 @@ elastic membership and multi-PON topologies.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.faults import FaultSchedule, RetryPolicy
-from repro.net.engine import SweepCase, simulate_round_sweep
+from repro.net.engine import SweepCase, _round_sweep
 from repro.net.sim import FLRoundWorkload, RoundResult
 
 __all__ = [
@@ -299,6 +300,10 @@ class TimelineRound:
     # (None = no quorum configured) and how often the deadline doubled
     quorum_met: Optional[bool] = None
     deadline_extensions: int = 0
+    # multi-tenant cases: job_id -> this round's per-job sync time
+    # (CPS tier; empty for single-tenant rounds and rounds the job
+    # sat out under its cadence)
+    job_sync: Dict[int, float] = field(default_factory=dict)
 
 
 @dataclass
@@ -718,7 +723,7 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
         deadlines = deadline_fn(r, row_cases, row_meta, outages)
         with maybe_span(collector, f"timeline:round[{r}]",
                         rows=len(row_cases)):
-            results = simulate_round_sweep(
+            results = _round_sweep(
                 cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
                 ul_deadline_s=deadlines, ul_outage_s=outages,
                 collector=collector, backend=backend,
@@ -762,7 +767,7 @@ def _advance_rounds(cfg, cases, schedule, t_round_hint, max_t, policy,
                             extension=ext_counts[ridx],
                         )
                 sub_idx = [ridx for _, ridx in redo]
-                sub = simulate_round_sweep(
+                sub = _round_sweep(
                     cfg, [row_cases[i] for i in sub_idx],
                     t_round_hint=t_round_hint, max_t=max_t,
                     ul_deadline_s=[dls[i] for i in sub_idx],
@@ -833,7 +838,7 @@ def _async(cfg, cases, schedule, t_round_hint, max_t, collector=None,
         # NOTE: the free-running probe pass stays uninstrumented — only
         # the deadline pass (the round that actually happens) feeds the
         # collector, so nothing is double-counted.
-        free = simulate_round_sweep(
+        free = _round_sweep(
             cfg, row_cases, t_round_hint=t_round_hint, max_t=max_t,
             ul_outage_s=outages, backend=backend,
         )
@@ -899,7 +904,7 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None,
     has_deadline = schedule.deadline_s is not None
     with maybe_span(collector, "timeline:folded", rows=len(rows),
                     rounds=schedule.n_rounds):
-        results = simulate_round_sweep(
+        results = _round_sweep(
             cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
             ul_deadline_s=row_deadlines if has_deadline else None,
             ul_outage_s=row_outages if has_outage else None,
@@ -922,14 +927,98 @@ def _folded(cfg, cases, schedule, t_round_hint, max_t, collector=None,
     return out
 
 
-def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
-                            schedule: TimelineSchedule,
-                            mode: str = "auto",
-                            t_round_hint: float = 10.0,
-                            max_t: float = 600.0,
-                            collector=None,
-                            backend: Optional[str] = None,
-                            ) -> List[TimelineResult]:
+def _jobs_schedule_check(schedule: TimelineSchedule) -> None:
+    """Multi-job timelines fold rounds by construction — reject every
+    schedule feature that couples rounds or rewrites per-round
+    workloads (those are single-tenant features; per-job round cadence
+    is expressed through ``JobSpec.period``/``phase`` instead)."""
+    if (schedule.membership is not None
+            or schedule.m_ud_bits is not None
+            or schedule.deadline_s is not None
+            or schedule.buffer_k is not None
+            or schedule.active_faults is not None
+            or schedule.quorum_frac is not None):
+        raise ValueError(
+            "multi-job timelines need a plain schedule (n_rounds "
+            "only): membership masks, per-round update sizes, "
+            "deadlines, async buffering, fault injection and quorum "
+            "extension are single-job features — encode per-job "
+            "cadence via JobSpec.period/phase instead"
+        )
+
+
+def _folded_jobs(cfg, cases, schedule, mode, t_round_hint, max_t,
+                 collector=None, backend=None):
+    """Folded driver for multi-tenant cases: each round keeps only the
+    jobs active under their cadence (``JobSpec.active_in``), the round
+    axis folds into the engine batch exactly like ``_folded``, and the
+    per-job CPS sync times land in ``TimelineRound.job_sync``."""
+    if not all(case.jobs is not None for case in cases):
+        raise ValueError(
+            "a timeline sweep cannot mix multi-job and single-job "
+            "cases; split them into separate sweeps"
+        )
+    _jobs_schedule_check(schedule)
+    if mode not in ("auto", "folded"):
+        raise ValueError(
+            "multi-job timelines have independent rounds and always "
+            f"fold; mode {mode!r} is unavailable"
+        )
+    rows = []
+    meta = []            # (b, r, rem_start, row_index or None)
+    for b, case in enumerate(cases):
+        for r in range(schedule.n_rounds):
+            active = tuple(j for j in case.jobs if j.active_in(r))
+            keep = {cid for j in active for cid in j.clients}
+            clients_r = [c for c in case.workload.clients
+                         if c.client_id in keep]
+            rem_start = {c.client_id: c.m_ud_bits for c in clients_r}
+            if not clients_r:
+                meta.append((b, r, rem_start, None))
+                continue
+            wl = FLRoundWorkload(
+                clients=clients_r,
+                model_bits=case.workload.model_bits,
+                t_aggregate=case.workload.t_aggregate,
+            )
+            meta.append((b, r, rem_start, len(rows)))
+            rows.append(replace(case, workload=wl, stream_round=r,
+                                jobs=active))
+    from repro.obs.trace import maybe_span
+
+    with maybe_span(collector, "timeline:folded-jobs", rows=len(rows),
+                    rounds=schedule.n_rounds):
+        results = _round_sweep(
+            cfg, rows, t_round_hint=t_round_hint, max_t=max_t,
+            collector=collector, backend=backend,
+        ) if rows else []
+    out = [TimelineResult(policy=c.policy, load=c.load, seed=c.seed,
+                          rounds=[]) for c in cases]
+    t_now = np.zeros(len(cases))
+    for b, r, rem_start, ridx in meta:
+        res = results[ridx] if ridx is not None else None
+        rnd, _ = _round_view(
+            r, float(t_now[b]), res, rem_start,
+            cases[b].workload.t_aggregate, "defer",
+        )
+        if res is not None and res.job_stats:
+            rnd.job_sync = {jid: js.sync_time
+                            for jid, js in res.job_stats.items()}
+        out[b].rounds.append(rnd)
+        t_now[b] += rnd.sync_time
+        if collector is not None:
+            _observe_round(collector, cases[b], rnd, None)
+    return out
+
+
+def _timeline_sweep(cfg, cases: Sequence[SweepCase],
+                    schedule: TimelineSchedule,
+                    mode: str = "auto",
+                    t_round_hint: float = 10.0,
+                    max_t: float = 600.0,
+                    collector=None,
+                    backend: Optional[str] = None,
+                    ) -> List[TimelineResult]:
     """Advance the full multi-round timeline for every case.
 
     ``mode="auto"`` folds the round axis into the batch (one stacked
@@ -938,7 +1027,9 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     to the sequential carry loop for defer deadlines;
     ``schedule.buffer_k`` selects the async (FedBuff) driver.
     ``"folded"``/``"sequential"`` force a path (parity tests check they
-    agree when both are legal).
+    agree when both are legal). Multi-job cases (``SweepCase.jobs``)
+    always fold — their rounds are independent by construction — and
+    report per-job sync times via ``TimelineRound.job_sync``.
 
     ``collector`` (``repro.obs.Collector``, optional) records engine
     phase metrics, per-round outcomes (``record_round``), upload-delay
@@ -948,6 +1039,9 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     probe pass is a search, not a simulated round.
     """
     cases = _validate(cases, schedule)
+    if any(case.jobs is not None for case in cases):
+        return _folded_jobs(cfg, cases, schedule, mode, t_round_hint,
+                            max_t, collector=collector, backend=backend)
     if schedule.asynchronous:
         if mode == "folded":
             raise ValueError(
@@ -975,6 +1069,65 @@ def simulate_timeline_sweep(cfg, cases: Sequence[SweepCase],
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def simulate_timeline_sweep(cfg, cases=None, schedule=None,
+                            mode: str = "auto",
+                            t_round_hint: float = 10.0,
+                            max_t: float = 600.0,
+                            collector=None,
+                            backend: Optional[str] = None,
+                            ) -> List[TimelineResult]:
+    """Advance the full multi-round timeline for every case.
+
+    Preferred form: build a :class:`repro.net.SweepSpec` carrying a
+    ``schedule`` and pass it as the sole positional argument (or as
+    ``cases`` with a ``PONConfig`` first). The legacy
+    ``(cfg, cases, schedule, **kwargs)`` form still works but emits a
+    ``DeprecationWarning``; both forms produce identical results (the
+    spec path is a thin frozen facade over the same driver).
+
+    See ``_timeline_sweep`` for mode semantics and the collector
+    contract.
+    """
+    from repro.net.api import SweepSpec, simulate
+
+    spec = None
+    pon = None
+    if isinstance(cfg, SweepSpec):
+        if cases is not None or schedule is not None:
+            raise TypeError(
+                "pass either a SweepSpec or (cfg, cases, schedule), "
+                "not both"
+            )
+        spec = cfg
+    elif isinstance(cases, SweepSpec):
+        if schedule is not None:
+            raise TypeError(
+                "pass the schedule inside the SweepSpec, not as a "
+                "third argument"
+            )
+        spec, pon = cases, cfg
+    if spec is not None:
+        if spec.schedule is None:
+            raise ValueError(
+                "simulate_timeline_sweep needs a spec with a "
+                "schedule; use simulate(spec) or "
+                "simulate_round_sweep(spec) for single-round sweeps"
+            )
+        if mode != "auto" and mode != spec.mode:
+            spec = replace(spec, mode=mode)
+        return simulate(spec, pon, collector=collector)
+    warnings.warn(
+        "simulate_timeline_sweep(cfg, cases, schedule, **kwargs) is "
+        "deprecated; build a repro.net.SweepSpec (with .schedule) and "
+        "call simulate(spec) (or pass the spec to "
+        "simulate_timeline_sweep)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _timeline_sweep(cfg, cases, schedule, mode=mode,
+                           t_round_hint=t_round_hint, max_t=max_t,
+                           collector=collector, backend=backend)
+
+
 def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
                                 schedule: TimelineSchedule,
                                 t_round_hint: float = 10.0,
@@ -985,8 +1138,13 @@ def simulate_timeline_per_round(cfg, cases: Sequence[SweepCase],
     """The PR 2 per-round loop: one engine call per round, queue state
     rebuilt every round. Identical results to ``simulate_timeline_sweep``
     (same streams); kept as the benchmark baseline. Async schedules run
-    the (inherently per-round) two-pass async driver."""
+    the (inherently per-round) two-pass async driver. Multi-job cases
+    delegate to the folded jobs driver — their rounds are independent,
+    so the per-round baseline and the fold coincide."""
     cases = _validate(cases, schedule)
+    if any(case.jobs is not None for case in cases):
+        return _folded_jobs(cfg, cases, schedule, "auto", t_round_hint,
+                            max_t, collector=collector, backend=backend)
     if schedule.asynchronous:
         return _async(cfg, cases, schedule, t_round_hint, max_t,
                       collector=collector, backend=backend)

@@ -1,0 +1,268 @@
+"""The PR 9 SweepSpec facade (``repro.net.api``).
+
+The frozen spec + ``simulate`` path must be result-identical to the
+deprecated keyword forms of ``simulate_round_sweep``/
+``simulate_timeline_sweep`` (which now warn and delegate), the
+builders must compose specs without mutation, ``validate()`` must
+reject malformed bundles with actionable errors, and the curated
+``repro.net.__all__`` plus the job-aware stream keys are pinned.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.net as net
+from repro.core.slicing import ClientProfile
+from repro.kernels.traffic import ops
+from repro.net import (
+    FaultSchedule,
+    FLRoundWorkload,
+    JobSpec,
+    PONConfig,
+    SweepCase,
+    SweepSpec,
+    TimelineSchedule,
+    simulate,
+    simulate_round_sweep,
+    simulate_timeline_sweep,
+)
+
+CFG = PONConfig(n_onus=8, line_rate_bps=1e9)
+
+
+def _clients(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        ClientProfile(client_id=i,
+                      t_ud=float(rng.uniform(0.05, 0.5)), t_dl=0.0,
+                      m_ud_bits=float(rng.uniform(1e5, 1e6)))
+        for i in range(n)
+    ]
+
+
+def _cases(n=6):
+    wl = FLRoundWorkload(clients=_clients(n), model_bits=5e5)
+    return tuple(
+        SweepCase(workload=wl, load=0.6, policy=policy, seed=0)
+        for policy in ("fcfs", "bs")
+    )
+
+
+class TestSpecKwargEquivalence:
+    def test_round_sweep(self):
+        cases = _cases()
+        spec = SweepSpec(cases=cases, pon=CFG)
+        new = simulate(spec)
+        with pytest.warns(DeprecationWarning, match="SweepSpec"):
+            old = simulate_round_sweep(CFG, list(cases))
+        assert [r.sync_time for r in new] == [r.sync_time for r in old]
+        assert [r.ul_done for r in new] == [r.ul_done for r in old]
+
+    def test_round_sweep_knobs(self):
+        cases = _cases()
+        spec = SweepSpec(cases=cases, pon=CFG, ul_deadline_s=2.0,
+                         t_round_hint=5.0)
+        new = simulate(spec)
+        with pytest.warns(DeprecationWarning):
+            old = simulate_round_sweep(CFG, list(cases),
+                                       ul_deadline_s=2.0,
+                                       t_round_hint=5.0)
+        assert [r.sync_time for r in new] == [r.sync_time for r in old]
+
+    def test_timeline_sweep(self):
+        cases = _cases()
+        sched = TimelineSchedule(n_rounds=3)
+        spec = SweepSpec(cases=cases, pon=CFG, schedule=sched)
+        new = simulate(spec)
+        with pytest.warns(DeprecationWarning, match="SweepSpec"):
+            old = simulate_timeline_sweep(CFG, list(cases), sched)
+        for a, b in zip(new, old):
+            assert list(a.sync_times) == list(b.sync_times)
+            assert a.total_time_s == b.total_time_s
+
+    def test_spec_through_wrappers_no_warning(self):
+        """Passing a spec to the legacy names is the blessed path."""
+        cases = _cases()
+        spec = SweepSpec(cases=cases, pon=CFG)
+        tspec = spec.with_schedule(TimelineSchedule(n_rounds=2))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            r1 = simulate_round_sweep(spec)
+            r2 = simulate_round_sweep(CFG, spec)
+            t1 = simulate_timeline_sweep(tspec)
+            t2 = simulate_timeline_sweep(CFG, tspec)
+        assert [r.sync_time for r in r1] == [
+            r.sync_time for r in simulate(spec)
+        ]
+        assert [r.sync_time for r in r2] == [r.sync_time for r in r1]
+        assert [list(t.sync_times) for t in t1] == [
+            list(t.sync_times) for t in simulate(tspec)
+        ]
+        assert [t.total_time_s for t in t2] == [
+            t.total_time_s for t in t1
+        ]
+
+    def test_wrapper_schedule_mismatch(self):
+        spec = SweepSpec(cases=_cases(), pon=CFG)
+        with pytest.raises(ValueError, match="schedule"):
+            simulate_round_sweep(
+                spec.with_schedule(TimelineSchedule(n_rounds=2))
+            )
+        with pytest.raises(ValueError, match="schedule"):
+            simulate_timeline_sweep(spec)
+
+    def test_wrapper_double_cases(self):
+        spec = SweepSpec(cases=_cases(), pon=CFG)
+        with pytest.raises(TypeError):
+            simulate_round_sweep(spec, list(_cases()))
+
+    def test_explicit_cfg_overrides_spec_pon(self):
+        cases = _cases()
+        big = PONConfig(n_onus=8, line_rate_bps=2e9)
+        spec = SweepSpec(cases=cases, pon=CFG)
+        a = simulate(spec, big)
+        b = simulate(SweepSpec(cases=cases, pon=big))
+        assert [r.sync_time for r in a] == [r.sync_time for r in b]
+
+
+class TestValidate:
+    def test_needs_cases(self):
+        with pytest.raises(ValueError, match="at least one case"):
+            SweepSpec().validate()
+
+    def test_case_type(self):
+        with pytest.raises(TypeError, match=r"cases\[0\]"):
+            SweepSpec(cases=("nope",)).validate()
+
+    def test_bad_policy_and_fairness(self):
+        wl = FLRoundWorkload(clients=_clients(), model_bits=5e5)
+        bad = SweepCase(workload=wl, load=0.5, policy="edf")
+        with pytest.raises(ValueError, match="unknown policy"):
+            SweepSpec(cases=(bad,)).validate()
+        bad = SweepCase(workload=wl, load=0.5, policy="bs",
+                        fairness="lottery")
+        with pytest.raises(ValueError, match="unknown fairness"):
+            SweepSpec(cases=(bad,)).validate()
+
+    def test_bad_mode_backend(self):
+        with pytest.raises(ValueError, match="unknown mode"):
+            SweepSpec(cases=_cases(),
+                      schedule=TimelineSchedule(n_rounds=1),
+                      mode="eager").validate()
+        with pytest.raises(ValueError, match="unknown backend"):
+            SweepSpec(cases=_cases(), backend="torch").validate()
+
+    def test_mode_needs_schedule(self):
+        with pytest.raises(ValueError, match="timeline knob"):
+            SweepSpec(cases=_cases(), mode="folded").validate()
+
+    def test_deadline_knobs_clash_with_schedule(self):
+        with pytest.raises(ValueError, match="from the schedule"):
+            SweepSpec(cases=_cases(),
+                      schedule=TimelineSchedule(n_rounds=1),
+                      ul_deadline_s=1.0).validate()
+
+    def test_pon_type(self):
+        with pytest.raises(TypeError, match="PONConfig"):
+            SweepSpec(cases=_cases(), pon="gpon").validate()
+
+    def test_simulate_rejects_non_spec(self):
+        with pytest.raises(TypeError, match="SweepSpec"):
+            simulate(list(_cases()))
+
+    def test_job_errors_carry_case_index(self):
+        wl = FLRoundWorkload(clients=_clients(4), model_bits=5e5)
+        jobs = (JobSpec(job_id=0, clients=(0, 1), model_bits=1e5),)
+        bad = SweepCase(workload=wl, load=0.5, policy="fcfs",
+                        jobs=jobs)
+        with pytest.raises(ValueError, match=r"cases\[0\]"):
+            SweepSpec(cases=(bad,)).validate()
+
+
+class TestBuilders:
+    def test_single_job(self):
+        spec = SweepSpec.single_job(_clients(4), 1e6, load=0.4,
+                                    policy="fcfs", seed=3, pon=CFG)
+        spec.validate()
+        assert len(spec.cases) == 1
+        case = spec.cases[0]
+        assert (case.policy, case.load, case.seed) == ("fcfs", 0.4, 3)
+        assert case.workload.model_bits == 1e6
+        assert spec.pon is CFG
+
+    def test_with_schedule_and_faults(self):
+        sched = TimelineSchedule(n_rounds=4)
+        faults = FaultSchedule(dropout_rate=0.1)
+        spec = SweepSpec(cases=_cases()).with_schedule(sched)
+        spec2 = spec.with_faults(faults)
+        assert spec.schedule.faults is None      # frozen: no mutation
+        assert spec2.schedule.faults is faults
+        assert spec2.schedule.n_rounds == 4
+
+    def test_with_faults_needs_schedule(self):
+        with pytest.raises(ValueError, match="with_schedule"):
+            SweepSpec(cases=_cases()).with_faults(
+                FaultSchedule(dropout_rate=0.1)
+            )
+
+    def test_with_jobs(self):
+        jobs = (
+            JobSpec(job_id=0, clients=(0, 1, 2), model_bits=5e5),
+            JobSpec(job_id=1, clients=(3, 4, 5), model_bits=2e5),
+        )
+        spec = SweepSpec(cases=_cases()).with_jobs(
+            jobs, fairness="weighted"
+        )
+        spec.validate()
+        assert all(c.jobs == jobs for c in spec.cases)
+        assert all(c.fairness == "weighted" for c in spec.cases)
+
+
+class TestCuratedSurface:
+    def test_all_resolves(self):
+        for name in net.__all__:
+            assert not name.startswith("_")
+            assert hasattr(net, name), name
+
+    def test_key_names_exported(self):
+        for name in ("SweepSpec", "simulate", "SweepCase", "JobSpec",
+                     "JobRoundStats", "job_fair_split",
+                     "FAIRNESS_POLICIES", "make_competing_jobs",
+                     "simulate_jobs_round_reference",
+                     "DEADLINE_POLICIES", "simulate_round_sweep",
+                     "simulate_timeline_sweep"):
+            assert name in net.__all__, name
+
+    def test_internal_drivers_not_exported(self):
+        assert "_round_sweep" not in net.__all__
+        assert "_timeline_sweep" not in net.__all__
+
+
+class TestJobStreamKeys:
+    def test_job0_bitwise_legacy(self):
+        for seed, phase, rnd, pon in ((7, 1, 3, 0), (3, 0, 5, 2)):
+            legacy = ops.make_stream_key(seed, phase, rnd, pon=pon)
+            keyed = ops.make_stream_key(seed, phase, rnd, pon=pon,
+                                        job=0)
+            assert np.array_equal(legacy, keyed)
+
+    def test_pinned_fingerprints(self):
+        pins = {
+            (7, 1, 3, 0, 0): (7, 7),
+            (7, 1, 3, 0, 1): (3266489916, 668265270),
+            (7, 1, 3, 1, 2): (1375963586, 1798376440),
+            (3, 0, 0, 0, 1): (3266489912, 668265263),
+            (3, 0, 0, 0, 2): (2238012525, 1336530526),
+        }
+        for (seed, phase, rnd, pon, job), want in pins.items():
+            key = ops.make_stream_key(seed, phase, rnd, pon=pon,
+                                      job=job)
+            assert tuple(int(x) for x in key) == want
+
+    def test_jobs_get_distinct_streams(self):
+        keys = {
+            tuple(ops.make_stream_key(3, 1, 2, pon=1, job=j).tolist())
+            for j in range(8)
+        }
+        assert len(keys) == 8
