@@ -10,7 +10,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.data import build_federated_cnn_clients
 from repro.fl import CPSServer, SelectionConfig

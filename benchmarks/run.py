@@ -40,20 +40,24 @@ def collect_modules(tier: str):
         training_time_saving,
     )
 
-    modules = [
-        ("bs_micro", bs_micro),
-        ("fig2b_sync_time", fig2b_sync_time),
-        ("training_time_saving", training_time_saving),
-        ("net_engine", net_engine),
-        ("multi_pon", multi_pon),
-        ("jobs", jobs),
-        ("timeline", timeline),
-        ("async_timeline", async_timeline),
-        ("faults", faults),
-        ("obs_overhead", obs_overhead),
-        ("fig2a_accuracy", fig2a_accuracy),
-        ("roofline_report", roofline_report),
-    ]
+    # sorted by name so the row order (and CI log diff) is deterministic
+    # regardless of how modules get added to this list
+    modules = sorted(
+        [
+            ("bs_micro", bs_micro),
+            ("fig2b_sync_time", fig2b_sync_time),
+            ("training_time_saving", training_time_saving),
+            ("net_engine", net_engine),
+            ("multi_pon", multi_pon),
+            ("jobs", jobs),
+            ("timeline", timeline),
+            ("async_timeline", async_timeline),
+            ("faults", faults),
+            ("obs_overhead", obs_overhead),
+            ("fig2a_accuracy", fig2a_accuracy),
+            ("roofline_report", roofline_report),
+        ]
+    )
     if tier == "all":
         return modules
     return [
@@ -111,6 +115,11 @@ def main(argv=None) -> None:
         from benchmarks._env import env_metadata
 
         meta = env_metadata()
+        try:
+            from repro.analysis import ANALYSIS_VERSION
+        except ImportError:  # src/ not on the path — provenance only
+            ANALYSIS_VERSION = None
+        meta["analysis"] = {"version": ANALYSIS_VERSION}
         if args.profile:
             # provenance only: compare.py drops the whole meta block, so
             # the breakdown can never become a gated (noisy) metric

@@ -1,0 +1,40 @@
+"""Invariant-aware static analysis for the repro codebase.
+
+The simulation's reproducibility story rests on source-level contracts
+(DESIGN.md §5–§12): counter-based streams only, no ambient x64 flips,
+tracer-pure device code, disjoint stream-key derivation constants,
+bitwise-uninstrumented ``collector=None`` paths and the
+``kernel.py``/``ref.py``/``ops.py`` triple per Pallas kernel.  Runtime
+tests catch violations *after* they ship; this package enforces them at
+the AST level, pre-merge::
+
+    python -m repro.analysis [--format text|json] [--baseline FILE] [paths...]
+
+Rule codes are ``RPA0xx`` (see DESIGN.md §13 for the code ↔ contract
+map).  Pre-existing, justified debt lives in ``analysis-baseline.json``;
+everything else fails CI.  The package is intentionally stdlib-only so
+the CI job needs no jax/numpy install.
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    Checker,
+    Finding,
+    ModuleInfo,
+    all_checkers,
+    load_modules,
+    run_checkers,
+)
+
+#: Stamped into BENCH payload ``meta`` blocks and JSON reports; bump on
+#: any rule-behaviour change so artifacts record which pass produced them.
+ANALYSIS_VERSION = "1.0.0"
+
+__all__ = [
+    "ANALYSIS_VERSION",
+    "Checker",
+    "Finding",
+    "ModuleInfo",
+    "all_checkers",
+    "load_modules",
+    "run_checkers",
+]

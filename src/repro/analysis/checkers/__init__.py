@@ -1,0 +1,10 @@
+"""Concrete RPA rule modules; importing this package registers them all."""
+
+from repro.analysis.checkers import (  # noqa: F401
+    collector,
+    determinism,
+    kernel_triple,
+    stream_keys,
+    tracer,
+    x64,
+)

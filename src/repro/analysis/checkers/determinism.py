@@ -1,0 +1,204 @@
+"""RPA001–RPA003: engine-path determinism.
+
+The PON/FL co-simulation engine (``repro.net``, ``repro.kernels``,
+``repro.faults``) is bitwise-reproducible because every random draw is
+a counter-based threefry stream keyed on ``(seed, phase, round, ...)``
+(DESIGN §6/§10) and nothing reads ambient host state.  These rules keep
+it that way:
+
+* **RPA001** — host RNG: stdlib ``random.*``, any ``np.random.*`` call
+  outside an explicitly *seeded* ``default_rng``/``Generator``
+  construction, and ``np.random.seed`` (global-state mutation).
+* **RPA002** — wall-clock reads (``time.time``, ``datetime.now``, …):
+  simulated time is the only clock the engine may consult.
+* **RPA003** — unordered iteration feeding numeric state: iterating a
+  ``set``/``frozenset`` (hash order), unsorted ``os.listdir``/``glob``
+  results, or ``vars()``-style namespace dicts.  Plain dict iteration
+  is *not* flagged — insertion order is deterministic in py3.7+ and the
+  engine relies on it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    ModuleInfo,
+    dotted_name,
+    enclosing_symbols,
+    import_aliases,
+    resolve_call_target,
+)
+
+ENGINE_SCOPE = ("net", "kernels", "faults")
+
+_SEEDED_CTORS = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+
+_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.clock_gettime",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+_LISTING_CALLS = {"os.listdir", "os.scandir", "glob.glob", "glob.iglob"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = dotted_name(node.func)
+        return fn in ("set", "frozenset")
+    return False
+
+
+class HostRngChecker(Checker):
+    code = "RPA001"
+    name = "determinism-host-rng"
+    description = (
+        "engine paths must draw randomness from counter-based streams, "
+        "never host RNG (stdlib random, unseeded np.random)"
+    )
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_package(*ENGINE_SCOPE):
+            return
+        aliases = import_aliases(mod.tree)
+        symbols = enclosing_symbols(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolve_call_target(node, aliases)
+            if target is None:
+                continue
+            symbol = symbols.get(node, "<module>")
+            if target.startswith("random."):
+                yield self.finding(
+                    mod, node,
+                    f"stdlib host RNG call `{target}` — engine randomness "
+                    f"must come from keyed threefry streams "
+                    f"(kernels.traffic / faults.streams)",
+                    symbol,
+                )
+            elif target.startswith(("numpy.random.", "np.random.")):
+                leaf = target.rsplit(".", 1)[1]
+                if leaf == "seed":
+                    yield self.finding(
+                        mod, node,
+                        "`np.random.seed` mutates global RNG state — "
+                        "engine paths must not touch the legacy global "
+                        "generator",
+                        symbol,
+                    )
+                elif leaf not in _SEEDED_CTORS:
+                    yield self.finding(
+                        mod, node,
+                        f"legacy global-state RNG call `np.random.{leaf}` "
+                        f"— use a seeded np.random.default_rng or a "
+                        f"counter-based stream",
+                        symbol,
+                    )
+                elif not node.args and not node.keywords:
+                    yield self.finding(
+                        mod, node,
+                        f"`np.random.{leaf}()` without a seed draws OS "
+                        f"entropy — pass an explicit seed",
+                        symbol,
+                    )
+
+
+class WallClockChecker(Checker):
+    code = "RPA002"
+    name = "determinism-wall-clock"
+    description = (
+        "engine paths must not read the wall clock; simulated time is "
+        "the only clock"
+    )
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_package(*ENGINE_SCOPE):
+            return
+        aliases = import_aliases(mod.tree)
+        symbols = enclosing_symbols(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolve_call_target(node, aliases)
+            if target in _CLOCK_CALLS:
+                yield self.finding(
+                    mod, node,
+                    f"wall-clock read `{target}()` inside an engine path — "
+                    f"simulation results must not depend on host time",
+                    symbols.get(node, "<module>"),
+                )
+
+
+class UnorderedIterChecker(Checker):
+    code = "RPA003"
+    name = "determinism-unordered-iteration"
+    description = (
+        "engine paths must not iterate hash-ordered sets or unsorted "
+        "directory listings into numeric state"
+    )
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_package(*ENGINE_SCOPE):
+            return
+        aliases = import_aliases(mod.tree)
+        symbols = enclosing_symbols(mod.tree)
+        sorted_args = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn in ("sorted", "min", "max", "len", "any", "all"):
+                    for a in node.args:
+                        sorted_args.add(id(a))
+        for node in ast.walk(mod.tree):
+            iters = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(g.iter for g in node.generators)
+            elif isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn in ("sum", "list", "tuple", "enumerate"):
+                    iters.extend(node.args[:1])
+            for it in iters:
+                if id(it) in sorted_args:
+                    continue
+                if _is_set_expr(it):
+                    yield self.finding(
+                        mod, it,
+                        "iteration over a set is hash-ordered — sort it "
+                        "(or keep a list/array) before it feeds engine "
+                        "state",
+                        symbols.get(it, symbols.get(node, "<module>")),
+                    )
+                elif isinstance(it, ast.Call):
+                    target = resolve_call_target(it, aliases)
+                    if target in _LISTING_CALLS:
+                        yield self.finding(
+                            mod, it,
+                            f"`{target}` order is filesystem-dependent — "
+                            f"wrap in sorted()",
+                            symbols.get(it, symbols.get(node, "<module>")),
+                        )
+                    elif (
+                        isinstance(it.func, ast.Attribute)
+                        and it.func.attr in ("keys", "values", "items")
+                        and isinstance(it.func.value, ast.Call)
+                        and dotted_name(it.func.value.func)
+                        in ("vars", "globals", "locals")
+                    ):
+                        yield self.finding(
+                            mod, it,
+                            "iterating a namespace dict "
+                            "(vars/globals/locals) feeds reflection order "
+                            "into engine state",
+                            symbols.get(it, symbols.get(node, "<module>")),
+                        )

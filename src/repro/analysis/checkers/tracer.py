@@ -1,0 +1,329 @@
+"""RPA005: tracer purity in device-traced kernel code.
+
+The jit PON backend (DESIGN §11) compiles whole phases into one
+``lax.while_loop`` program, and every ``kernels/<name>/`` triple ships a
+traced oracle (``*_ref``) plus a Pallas kernel.  A host sync inside a
+traced function — ``.item()``, ``float()``/``int()`` on a traced value,
+``np.asarray`` on a tracer, Python ``if`` on a traced predicate — either
+crashes under jit or, worse, silently freezes a traced value at trace
+time (a wrong-answer bug, not an error).
+
+Traced roots are discovered structurally, per module in
+``repro/kernels/``:
+
+* functions wrapped by ``jax.jit`` / ``functools.partial(jax.jit, …)``
+  (decorator or call form) and ``jax.vmap``/``jax.grad``;
+* callees handed to ``lax.while_loop``/``cond``/``scan``/``fori_loop``/
+  ``switch``/``map`` and ``pl.pallas_call``;
+* public ``*_ref`` oracles (traced-by-contract: they run under the
+  engine's jit program).
+
+plus everything they call (direct same-module calls, nested defs
+included).  Inside those bodies the rule flags host syncs.  Python
+branches are only flagged when the tested name is *array-like* (used in
+``jnp.``/``lax.`` arithmetic inside the same function) and the test is
+not a static accessor (``is None``, ``.shape``/``.ndim``/``.dtype``,
+``len()``, ``isinstance``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set
+
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    ModuleInfo,
+    dotted_name,
+    enclosing_symbols,
+    walk_functions,
+)
+
+_LAX_HOFS = {
+    "while_loop", "cond", "scan", "fori_loop", "switch", "map",
+    "associated_scan", "associative_scan",
+}
+_JIT_WRAPPERS = {"jit", "vmap", "grad", "value_and_grad", "pmap", "checkify"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "name"}
+_HOST_SYNC_METHODS = {"item", "tolist", "to_py"}
+_NP_HOST_CALLS = {"asarray", "array", "ascontiguousarray", "copyto", "save"}
+
+
+def _callable_names(node: ast.AST) -> List[str]:
+    """Plain function names referenced by an expression (Name or
+    functools.partial(Name, …))."""
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Call):
+        fn = dotted_name(node.func) or ""
+        if fn.endswith("partial"):
+            out: List[str] = []
+            for a in node.args:
+                out.extend(_callable_names(a))
+            return out
+    return []
+
+
+class _FnInfo:
+    def __init__(self, qual: str, node: ast.AST) -> None:
+        self.qual = qual
+        self.node = node
+        self.calls: Set[str] = set()       # unqualified callee names
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Name):
+                self.calls.add(n.func.id)
+
+
+class TracerPurityChecker(Checker):
+    code = "RPA005"
+    name = "tracer-purity"
+    description = (
+        "functions traced under jit/pallas must not host-sync "
+        "(.item(), float()/int(), np.asarray, Python branches on tracers)"
+    )
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_package("kernels"):
+            return
+        symbols = enclosing_symbols(mod.tree)
+        fns: Dict[str, _FnInfo] = {}
+        by_name: Dict[str, List[str]] = {}
+        for qual, node in walk_functions(mod.tree):
+            fns[qual] = _FnInfo(qual, node)
+            by_name.setdefault(qual.rsplit(".", 1)[-1], []).append(qual)
+
+        roots = self._find_roots(mod, fns)
+        reachable = self._reach(roots, fns, by_name)
+        for qual in sorted(reachable):
+            yield from self._check_body(mod, fns[qual], symbols)
+
+    # -- root discovery ----------------------------------------------------
+
+    def _find_roots(
+        self, mod: ModuleInfo, fns: Dict[str, _FnInfo]
+    ) -> Set[str]:
+        roots: Set[str] = set()
+        simple = {q.rsplit(".", 1)[-1]: q for q in fns}
+
+        def add_names(expr: ast.AST) -> None:
+            for name in _callable_names(expr):
+                if name in simple:
+                    roots.add(simple[name])
+
+        for qual, info in fns.items():
+            node = info.node
+            name = qual.rsplit(".", 1)[-1]
+            if name.endswith("_ref") and not name.startswith("_"):
+                roots.add(qual)
+            for dec in getattr(node, "decorator_list", []):
+                targets = [dotted_name(dec) or ""]
+                if isinstance(dec, ast.Call):
+                    targets = [dotted_name(dec.func) or ""]
+                    for a in dec.args:
+                        targets.append(dotted_name(a) or "")
+                for t in targets:
+                    leaf = t.rsplit(".", 1)[-1]
+                    if leaf in _JIT_WRAPPERS:
+                        roots.add(qual)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func) or ""
+            leaf = fn.rsplit(".", 1)[-1]
+            if leaf in _JIT_WRAPPERS:
+                for a in node.args:
+                    add_names(a)
+            elif leaf in _LAX_HOFS:
+                for a in node.args:
+                    add_names(a)
+            elif leaf == "pallas_call":
+                for a in list(node.args) + [
+                    kw.value for kw in node.keywords
+                ]:
+                    add_names(a)
+        return roots
+
+    def _reach(
+        self,
+        roots: Set[str],
+        fns: Dict[str, _FnInfo],
+        by_name: Dict[str, List[str]],
+    ) -> Set[str]:
+        seen: Set[str] = set()
+        stack = sorted(roots)
+        while stack:
+            qual = stack.pop()
+            if qual in seen or qual not in fns:
+                continue
+            seen.add(qual)
+            # nested defs trace with their parent
+            prefix = qual + "."
+            for other in fns:
+                if other.startswith(prefix) and "." not in other[len(prefix):]:
+                    stack.append(other)
+            for callee in fns[qual].calls:
+                for target in by_name.get(callee, []):
+                    stack.append(target)
+        return seen
+
+    # -- body rules --------------------------------------------------------
+
+    def _check_body(
+        self, mod: ModuleInfo, info: _FnInfo, symbols
+    ) -> Iterator[Finding]:
+        node = info.node
+        params = set()
+        for a in (
+            list(node.args.args)
+            + list(node.args.posonlyargs)
+            + list(node.args.kwonlyargs)
+        ):
+            if a.arg in ("self", "cls"):
+                continue
+            # `n_draws: int`-style annotations declare a static config
+            # argument — never a tracer candidate
+            ann = a.annotation
+            if isinstance(ann, ast.Name) and ann.id in (
+                "int", "float", "bool", "str", "bytes"
+            ):
+                continue
+            params.add(a.arg)
+        arraylike = self._arraylike_names(node, params)
+
+        own_nested = set()
+        for n in ast.walk(node):
+            if n is not node and isinstance(
+                n, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                own_nested.add(n)
+
+        def in_nested(n: ast.AST) -> bool:
+            return any(
+                n in ast.walk(nested) and n is not nested
+                for nested in own_nested
+            )
+
+        for n in ast.walk(node):
+            if n is node or in_nested(n):
+                continue  # nested defs are checked as their own unit
+            if isinstance(n, ast.Call):
+                fn = dotted_name(n.func) or ""
+                leaf = fn.rsplit(".", 1)[-1]
+                if (
+                    isinstance(n.func, ast.Attribute)
+                    and n.func.attr in _HOST_SYNC_METHODS
+                ):
+                    yield self.finding(
+                        mod, n,
+                        f"`.{n.func.attr}()` forces a host sync — illegal "
+                        f"inside a traced function",
+                        symbols.get(n, info.qual),
+                    )
+                elif fn.startswith(("np.", "numpy.")) and (
+                    leaf in _NP_HOST_CALLS
+                ):
+                    yield self.finding(
+                        mod, n,
+                        f"`{fn}` materialises on host — a traced value "
+                        f"must stay jnp (use jnp.{leaf})",
+                        symbols.get(n, info.qual),
+                    )
+                elif fn in ("float", "int", "bool") and n.args:
+                    a = n.args[0]
+                    if not isinstance(a, ast.Constant) and self._mentions(
+                        a, arraylike
+                    ):
+                        yield self.finding(
+                            mod, n,
+                            f"builtin `{fn}()` on a traced value forces a "
+                            f"concrete host scalar at trace time",
+                            symbols.get(n, info.qual),
+                        )
+            elif isinstance(n, (ast.If, ast.While)):
+                test = n.test
+                if self._is_dynamic_test(test, arraylike):
+                    kind = "if" if isinstance(n, ast.If) else "while"
+                    yield self.finding(
+                        mod, test,
+                        f"Python `{kind}` on a traced value — tracing "
+                        f"freezes one branch; use lax.cond/jnp.where",
+                        symbols.get(n, info.qual),
+                    )
+
+    def _arraylike_names(self, node: ast.AST, params: Set[str]) -> Set[str]:
+        """Params (and names derived from jnp/lax results) that plausibly
+        hold traced arrays: used inside jnp./lax. calls or in arithmetic
+        with them."""
+        arraylike: Set[str] = set()
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                fn = dotted_name(n.func) or ""
+                if fn.startswith(("jnp.", "lax.", "jax.numpy.", "jax.lax.")):
+                    for a in list(n.args) + [kw.value for kw in n.keywords]:
+                        for name_node in self._walk_same_scope(a):
+                            if (
+                                isinstance(name_node, ast.Name)
+                                and name_node.id in params
+                            ):
+                                arraylike.add(name_node.id)
+        return arraylike
+
+    def _walk_same_scope(self, node: ast.AST):
+        """ast.walk that does not descend into nested defs/lambdas —
+        their bodies reference closure names from a different scope."""
+        yield node
+        stack = [node]
+        while stack:
+            cur = stack.pop()
+            for child in ast.iter_child_nodes(cur):
+                if isinstance(
+                    child,
+                    (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda),
+                ):
+                    continue
+                yield child
+                stack.append(child)
+
+    def _mentions(self, expr: ast.AST, names: Set[str]) -> bool:
+        return any(
+            isinstance(n, ast.Name) and n.id in names
+            for n in ast.walk(expr)
+        )
+
+    def _is_dynamic_test(self, test: ast.AST, arraylike: Set[str]) -> bool:
+        if not self._mentions(test, arraylike):
+            return False
+        # static accessors make the test trace-safe
+        for n in ast.walk(test):
+            if isinstance(n, ast.Name) and n.id in arraylike:
+                if not self._static_use(n, test):
+                    return True
+        return False
+
+    def _static_use(self, name_node: ast.Name, test: ast.AST) -> bool:
+        """True when this reference only feeds static accessors
+        (.shape/.ndim/.dtype, len(), isinstance, `is None`)."""
+        parents: Dict[ast.AST, ast.AST] = {}
+        for p in ast.walk(test):
+            for c in ast.iter_child_nodes(p):
+                parents[c] = p
+        n: ast.AST = name_node
+        parent = parents.get(n)
+        while parent is not None:
+            if isinstance(parent, ast.Attribute) and (
+                parent.attr in _STATIC_ATTRS
+            ):
+                return True
+            if isinstance(parent, ast.Call):
+                fn = dotted_name(parent.func) or ""
+                if fn in ("len", "isinstance", "type", "getattr", "hasattr"):
+                    return True
+                return False
+            if isinstance(parent, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot))
+                for op in parent.ops
+            ):
+                return True
+            n, parent = parent, parents.get(parent)
+        return False

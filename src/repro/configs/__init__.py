@@ -9,8 +9,8 @@ from repro.configs.base import (  # noqa: F401
     ALL_SHAPES,
     ATTN,
     RGLRU,
-    SSD,
     SHAPES_BY_NAME,
+    SSD,
     InputShape,
     LayerSpec,
     ModelConfig,

@@ -9,7 +9,7 @@ recurrentgemma's rec-rec-attn) scan cleanly over stacked unit params.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

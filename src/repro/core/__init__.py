@@ -1,11 +1,14 @@
 """The paper's primary contribution: bandwidth slicing for FL in edge computing."""
-from repro.core.slicing import (  # noqa: F401
-    ClientProfile,
-    SliceSpec,
-    compute_slice,
-    min_round_time,
-    nabla,
-    validate_round_deadline,
+from repro.core.deadline import (  # noqa: F401
+    greedy_max_clients,
+    select_by_deadline,
+)
+from repro.core.membership import MembershipEvent, SliceManager  # noqa: F401
+from repro.core.round_model import (  # noqa: F401
+    RoundTiming,
+    bs_round_time,
+    download_time,
+    heterogeneous_compute_times,
 )
 from repro.core.scheduler import (  # noqa: F401
     CycleGrant,
@@ -15,14 +18,11 @@ from repro.core.scheduler import (  # noqa: F401
     schedule_slots,
     validate_schedule,
 )
-from repro.core.round_model import (  # noqa: F401
-    RoundTiming,
-    bs_round_time,
-    download_time,
-    heterogeneous_compute_times,
-)
-from repro.core.membership import MembershipEvent, SliceManager  # noqa: F401
-from repro.core.deadline import (  # noqa: F401
-    greedy_max_clients,
-    select_by_deadline,
+from repro.core.slicing import (  # noqa: F401
+    ClientProfile,
+    SliceSpec,
+    compute_slice,
+    min_round_time,
+    nabla,
+    validate_round_deadline,
 )

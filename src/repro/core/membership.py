@@ -9,7 +9,7 @@ recovered client is a `join`.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.slicing import ClientProfile, SliceSpec, compute_slice
 

@@ -20,8 +20,8 @@ see ``repro.core.membership``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Sequence, Tuple
+from dataclasses import dataclass
+from typing import Sequence
 
 LIGHT_SPEED_FIBER = 2.0e8  # m/s
 

@@ -8,7 +8,7 @@ stream by pod index before batching.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import numpy as np

@@ -38,10 +38,12 @@ FAULT_DROPOUT = 0                 # client dies mid-upload
 FAULT_OUTAGE = 1                  # ONU/link outage window (per PON)
 FAULT_LOSS = 2                    # update payload lost/corrupted
 
-# Weyl constants: golden ratio / murmur3 fmix / splitmix increments —
-# deliberately distinct from the traffic sampler's _PON_WEYL_* pair
-_CLASS_WEYL_0 = 0x9E3779B9
-_CLASS_WEYL_1 = 0x85EBCA6B
+# Weyl constants: xxhash PRIME32_1/2 + splitmix increment — deliberately
+# distinct from *every* traffic-sampler constant (KEY_WEYL_* in
+# traffic/ref.py and _PON_WEYL_*/_JOB_WEYL_* in traffic/ops.py); the
+# RPA006 stream-key checker enforces pairwise disjointness
+_CLASS_WEYL_0 = 0x9E3779B1
+_CLASS_WEYL_1 = 0x85EBCA77
 _CASE_WEYL = 0x6C8E9CF5
 
 _INV_2_32 = float(2.0 ** -32)

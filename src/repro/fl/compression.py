@@ -14,7 +14,7 @@ with error feedback so compression noise does not bias FedAvg:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +79,6 @@ def compress_delta(delta, cfg: CompressorConfig, error_state=None):
 
     bits_total = 0
     decoded = {}
-    new_err = {}
 
     leaves_d, treedef = jax.tree.flatten(delta)
     leaves_e = (

@@ -36,13 +36,13 @@ import numpy as np
 
 from repro.core.slicing import ClientProfile
 from repro.faults import FaultSchedule, RetryPolicy
+from repro.fl.server import CPSServer
 from repro.net.api import SweepSpec, simulate
 from repro.net.engine import SweepCase
 from repro.net.jobs import JobSpec
 from repro.net.multi_pon import MultiPonTopology
-from repro.net.sim import FLRoundWorkload, PONConfig, RoundResult
+from repro.net.sim import FLRoundWorkload, PONConfig
 from repro.net.timeline import TimelineSchedule
-from repro.fl.server import CPSServer
 
 
 @dataclass

@@ -58,16 +58,15 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental import enable_x64
 
 from repro.kernels.ponsim import ref as _ref
 from repro.kernels.ponsim.kernel import waterfill_grants_pallas
-from repro.kernels.traffic.ref import WINDOW, _WIN_SHIFT
+from repro.kernels.traffic.ref import _WIN_SHIFT, WINDOW
 
 CAP_EPS = 1e-9                       # repro.net.engine constants
 SEG_EPS = 1.0

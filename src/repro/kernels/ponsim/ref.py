@@ -32,9 +32,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels.traffic.ref import (
+    _WIN_SHIFT,
     UNIT_SCALE,
     WINDOW,
-    _WIN_SHIFT,
     draw_key,
     threefry2x32_ref,
 )

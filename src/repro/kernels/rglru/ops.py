@@ -1,7 +1,6 @@
 """Jit'd wrapper for the RG-LRU scan: Pallas fwd, XLA-reference bwd."""
 from __future__ import annotations
 
-import functools
 
 import jax
 

@@ -21,7 +21,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Dict, Optional
@@ -30,10 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import applicable_shapes, get_config, list_architectures
-from repro.launch.hlo_analysis import analyze as analyze_hlo
 from repro.configs.base import SHAPES_BY_NAME, InputShape, param_count
 from repro.dist import stepfns
 from repro.launch import specs as specs_mod
+from repro.launch.hlo_analysis import analyze as analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.optim.optimizers import OptimizerConfig
 

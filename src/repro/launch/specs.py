@@ -7,7 +7,7 @@ No device allocation anywhere: parameter/optimizer/cache shapes come from
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

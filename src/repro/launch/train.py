@@ -29,9 +29,9 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core.slicing import ClientProfile
-from repro.faults import FaultSchedule
 from repro.data import TokenBatcher, lm_tokens
 from repro.dist import stepfns
+from repro.faults import FaultSchedule
 from repro.launch.mesh import make_host_mesh
 from repro.net.api import SweepSpec, simulate
 from repro.net.engine import SweepCase

@@ -14,10 +14,8 @@ import jax.numpy as jnp
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models.layers import (
     apply_head_norm,
-    apply_norm,
     apply_rope,
     dense_init,
-    norm_init,
     rms_head_norm_init,
 )
 

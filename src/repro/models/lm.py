@@ -14,7 +14,6 @@ Three entry points per the assigned shapes:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,13 @@ from repro.net.api import (
     SweepSpec,
     simulate,
 )
+from repro.net.dba import (
+    DEFAULT_EFFICIENCY,
+    FCFSBestEffort,
+    FCFSLimitedService,
+    OnuQueue,
+    SlicedDBA,
+)
 from repro.net.engine import (
     SweepCase,
     simulate_round_sweep,
@@ -31,6 +38,12 @@ from repro.net.multi_pon import (
     pon_bg_rates,
     simulate_multi_pon_round,
 )
+from repro.net.sim import (
+    FLRoundWorkload,
+    PONConfig,
+    RoundResult,
+    simulate_round,
+)
 from repro.net.timeline import (
     DEADLINE_POLICIES,
     TimelineResult,
@@ -39,19 +52,6 @@ from repro.net.timeline import (
     simulate_timeline_per_round,
     simulate_timeline_reference,
     simulate_timeline_sweep,
-)
-from repro.net.dba import (
-    DEFAULT_EFFICIENCY,
-    FCFSBestEffort,
-    FCFSLimitedService,
-    OnuQueue,
-    SlicedDBA,
-)
-from repro.net.sim import (
-    FLRoundWorkload,
-    PONConfig,
-    RoundResult,
-    simulate_round,
 )
 from repro.net.traffic import (
     PACKET_BITS,

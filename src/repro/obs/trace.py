@@ -7,7 +7,8 @@ as Chrome trace-event "X" (complete) events viewable in Perfetto /
 yields immediately with no timestamping, so instrumented code paths
 cost one attribute check when tracing is off.
 
-Format (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
+Format (Chrome trace-event spec,
+https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
 ``{"traceEvents": [{"name", "ph": "X", "ts", "dur", "pid", "tid",
 "cat", "args"}, ...], "displayTimeUnit": "ms"}`` with timestamps in
 microseconds.
@@ -19,7 +20,7 @@ import os
 import threading
 import time
 from contextlib import contextmanager
-from typing import List, Optional
+from typing import List
 
 __all__ = ["SpanTracer", "NULL_TRACER", "load_trace", "validate_trace",
            "maybe_span"]

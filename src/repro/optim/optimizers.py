@@ -35,7 +35,8 @@ class OptState(NamedTuple):
 
 def init_opt_state(params, cfg: OptimizerConfig) -> OptState:
     dt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda: jax.tree.map(lambda l: jnp.zeros(l.shape, dt), params)
+    def zeros():
+        return jax.tree.map(lambda l: jnp.zeros(l.shape, dt), params)
     step = jnp.zeros((), jnp.int32)
     if cfg.name == "sgd":
         empty = jax.tree.map(lambda l: jnp.zeros((0,), dt), params)

@@ -1,14 +1,10 @@
 """Distribution tests on a small host mesh (subprocess isolation for the
 device-count env var, since the main test process must keep 1 device)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P

@@ -123,12 +123,12 @@ class TestFaultStreams:
         """Exact stream bits — any change to keying or the threefry
         core is a determinism break, not a refactor."""
         pins = {
-            (FAULT_DROPOUT, 0, 0): 0xFE974E54C8D0C5BA,
-            (FAULT_DROPOUT, 5, 7): 0x6FC1E91ACB4A6DCC,
-            (FAULT_OUTAGE, 0, 0): 0x506D0B17777036A4,
-            (FAULT_OUTAGE, 5, 7): 0xE75C0496AC0B6825,
-            (FAULT_LOSS, 0, 0): 0x95480FB701D94EDB,
-            (FAULT_LOSS, 5, 7): 0x1D3B7B17945C5CA1,
+            (FAULT_DROPOUT, 0, 0): 0x4B14B5901A556C85,
+            (FAULT_DROPOUT, 5, 7): 0x5379E8E3DA420974,
+            (FAULT_OUTAGE, 0, 0): 0x770188B2C65163C8,
+            (FAULT_OUTAGE, 5, 7): 0x4C4DA1B9F892DE6E,
+            (FAULT_LOSS, 0, 0): 0x94778675CC2AA9A1,
+            (FAULT_LOSS, 5, 7): 0xC0FAF1B1D2B640CD,
         }
         for (cls, r, case), want in pins.items():
             assert fault_fingerprint(3, cls, r, 16, case_seed=case) == want

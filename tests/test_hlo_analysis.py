@@ -1,7 +1,7 @@
 """Unit tests for the HLO static analyser (roofline inputs)."""
 import textwrap
 
-from repro.launch.hlo_analysis import HloModule, analyze, _type_bytes
+from repro.launch.hlo_analysis import HloModule, _type_bytes, analyze
 
 
 SAMPLE = textwrap.dedent("""

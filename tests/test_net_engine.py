@@ -14,8 +14,8 @@ try:
 except ImportError:          # seeded trials below still cover parity
     HAVE_HYPOTHESIS = False
 
-from repro.core.slicing import ClientProfile
-from repro.net import (
+from repro.core.slicing import ClientProfile  # noqa: E402
+from repro.net import (  # noqa: E402
     FLRoundWorkload,
     PONConfig,
     PrecomputedSource,

@@ -32,7 +32,6 @@ from repro.obs import (
     Collector,
     EventLog,
     GaugeArray,
-    MetricsReport,
     SpanTracer,
     StreamingHistogram,
 )

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.slicing import ClientProfile
 from repro.net import FLRoundWorkload, OnuQueue, PONConfig, simulate_round
-from repro.net.dba import FCFSBestEffort, SlicedDBA
+from repro.net.dba import FCFSBestEffort
 from repro.net.traffic import PoissonSource, background_rate_for_load
 
 M = 26.416e6

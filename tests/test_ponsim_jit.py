@@ -17,10 +17,9 @@ chains the device program all the way down.  On top of parity:
 """
 import hashlib
 
+import jax
 import numpy as np
 import pytest
-
-import jax
 
 from repro.core.slicing import ClientProfile
 from repro.faults import FaultSchedule

@@ -1,5 +1,4 @@
 """Hypothesis property-based tests for the system's invariants."""
-import math
 
 import numpy as np
 import pytest
@@ -7,15 +6,15 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (
+from repro.core import (  # noqa: E402
     ClientProfile,
     compute_slice,
     schedule_makespan,
     schedule_slots,
     validate_schedule,
 )
-from repro.core.round_model import bs_round_time
-from repro.fl.aggregation import fedavg
+from repro.core.round_model import bs_round_time  # noqa: E402
+from repro.fl.aggregation import fedavg  # noqa: E402
 
 C = 10e9
 

@@ -47,7 +47,8 @@ def _build(n_clients=8, fraction=1.0, policy="bs", load=0.8, seed=0,
         timing_seeds=1,
     )
     test_batch = {"images": test["images"][:256], "labels": test["labels"][:256]}
-    eval_fn = lambda p: cnn.accuracy(p, test_batch)
+    def eval_fn(p):
+        return cnn.accuracy(p, test_batch)
     return FLNetworkCoSim(server, cfg), eval_fn
 
 
